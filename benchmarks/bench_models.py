@@ -1,0 +1,53 @@
+"""LM-substrate throughput smoke benchmark: one train step + one decode
+step per assigned architecture (reduced configs, CPU) — proves every arch
+is runnable end-to-end and gives a relative cost profile."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ShapeConfig, get_arch, list_archs
+from repro.models import model as model_lib
+from repro.train.optimizer import AdamW
+from repro.train.train_step import init_state, make_train_step
+
+SHAPE = ShapeConfig("bench", "train", 64, 2)
+
+
+def run(quick: bool = True):
+    rows = []
+    archs = list_archs() if not quick else list_archs()[:10]
+    for arch in archs:
+        cfg = get_arch(arch, smoke=True)
+        opt = AdamW(lr=1e-3)
+        state = init_state(cfg, opt, jax.random.key(0), max_seq=SHAPE.seq_len)
+        step = jax.jit(make_train_step(cfg, opt))
+        rng = np.random.default_rng(0)
+        batch = {
+            "tokens": jnp.asarray(
+                rng.integers(0, cfg.vocab_size, (2, 64)), jnp.int32
+            ),
+            "labels": jnp.asarray(
+                rng.integers(0, cfg.vocab_size, (2, 64)), jnp.int32
+            ),
+        }
+        if cfg.family in ("audio", "vlm"):
+            batch["frontend"] = jnp.asarray(
+                rng.normal(size=(2, cfg.n_frontend_tokens, cfg.d_model)),
+                jnp.float32,
+            )
+        state, _ = step(state, batch)  # compile
+        t0 = time.perf_counter()
+        reps = 3
+        for _ in range(reps):
+            state, metrics = step(state, batch)
+        jax.block_until_ready(metrics["loss"])
+        dt = (time.perf_counter() - t0) / reps
+        tok_s = 2 * 64 / dt
+        rows.append({"arch": arch, "train_step_s": dt, "tok_s": tok_s})
+        print(f"bench_models,{arch},us_per_step={dt*1e6:.0f},tok_s={tok_s:.0f}")
+    return rows

@@ -1,0 +1,79 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+
+Prints ``name,metric=value,...`` CSV lines per benchmark and writes the
+aggregate JSON to experiments/bench_results.json.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks import (  # noqa: E402
+    bench_equivalence,
+    bench_gene,
+    bench_models,
+    bench_notears,
+    bench_speedup,
+    bench_stocks,
+)
+
+BENCHES = {
+    "speedup": bench_speedup.run,          # paper Fig. 2
+    "equivalence": bench_equivalence.run,  # paper Fig. 3
+    "notears": bench_notears.run,          # paper §3.1
+    "gene": bench_gene.run,                # paper Table 1
+    "stocks": bench_stocks.run,            # paper Fig. 4 / Table 2
+    "models": bench_models.run,            # substrate throughput smoke
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sizes (slow on CPU)")
+    ap.add_argument("--only", type=str, default=None)
+    ap.add_argument("--out", type=str,
+                    default="experiments/bench_results.json")
+    args = ap.parse_args()
+
+    results = {}
+    for name, fn in BENCHES.items():
+        if args.only and name != args.only:
+            continue
+        t0 = time.time()
+        print(f"=== bench:{name} ===")
+        try:
+            results[name] = fn(quick=not args.full)
+        except Exception as e:  # noqa: BLE001
+            import traceback
+
+            traceback.print_exc()
+            results[name] = {"error": str(e)}
+        print(f"=== bench:{name} done in {time.time()-t0:.1f}s ===\n")
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+
+    def default(o):
+        import numpy as np
+
+        if isinstance(o, (np.integer,)):
+            return int(o)
+        if isinstance(o, (np.floating,)):
+            return float(o)
+        raise TypeError(type(o))
+
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=1, default=default)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

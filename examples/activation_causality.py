@@ -1,0 +1,65 @@
+"""LiNGAM x LM integration: causal analysis of transformer activations.
+
+    PYTHONPATH=src python examples/activation_causality.py
+
+Trains a tiny LM briefly, collects per-layer mean activations over a probe
+batch, and runs DirectLiNGAM over the layer features to estimate the
+causal (information-flow) ordering across layers — the integration point
+between the paper's technique and the LM substrate (DESIGN.md §4).
+A sanity property: the discovered causal order should correlate with
+layer depth (information flows forward).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_arch
+from repro.core import DirectLiNGAM
+from repro.models import layers, model as model_lib
+
+
+def collect_layer_features(cfg, params, tokens):
+    """Mean-pooled activation per layer per sequence: (B, n_layers)."""
+    x = layers.embed(cfg, params["embed"], tokens)
+    positions = jnp.arange(tokens.shape[1])
+    feats = []
+    pattern = model_lib.layer_pattern(cfg)
+    for g in range(model_lib.n_groups(cfg)):
+        for pos, desc in enumerate(pattern):
+            lp = jax.tree.map(lambda t: t[g], params["groups"][pos])
+            h = layers.apply_norm(cfg, lp["ln1"], x)
+            a, _ = layers.attention(cfg, lp["attn"], h, positions=positions)
+            x = x + a
+            h2 = layers.apply_norm(cfg, lp["ln2"], x)
+            x = x + layers.apply_mlp(cfg, lp["mlp"], h2)
+            feats.append(jnp.mean(x.astype(jnp.float32), axis=(1, 2)))
+    return jnp.stack(feats, axis=1)  # (B, L)
+
+
+def main():
+    cfg = get_arch("qwen3-1.7b", smoke=True).replace(n_layers=6)
+    params = model_lib.init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(0)
+    tokens = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (512, 16)), jnp.int32
+    )
+    feats = np.array(collect_layer_features(cfg, params, tokens))
+    feats += rng.laplace(size=feats.shape) * 0.05 * feats.std()  # break ties
+
+    model = DirectLiNGAM(backend="blocked").fit(feats)
+    order = model.causal_order_
+    depth_corr = np.corrcoef(np.argsort(order), np.arange(len(order)))[0, 1]
+    print("layer causal order:", order)
+    print(f"correlation with depth: {depth_corr:.2f}")
+    print(
+        "note: with random (untrained) weights the layer features are a\n"
+        "near-deterministic chain plus injected measurement noise — outside\n"
+        "LiNGAM's independent-structural-noise assumptions — so the order\n"
+        "is exploratory here; the point of this example is the integration\n"
+        "path (LM activations -> DirectLiNGAM), not a causal claim."
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Quickstart: causal discovery with AcceleratedLiNGAM on TPU/CPU.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Simulates data from a known layered DAG (paper §3.1 protocol), runs the
+parallel DirectLiNGAM, verifies it against the sequential reference, and
+prints the recovered adjacency.
+"""
+
+import numpy as np
+
+from repro.baselines.sequential_lingam import causal_order_sequential
+from repro.core import DirectLiNGAM, VarLiNGAM
+from repro.data.simulate import simulate_lingam, simulate_var_stocks
+
+
+def main():
+    print("=== DirectLiNGAM (paper Algorithm 1, parallel) ===")
+    gt = simulate_lingam(m=5_000, d=10, seed=0)
+    model = DirectLiNGAM(backend="blocked", prune_threshold=0.1).fit(gt.data)
+    print("causal order :", model.causal_order_)
+    print("sequential   :", causal_order_sequential(gt.data))
+    agree = np.array_equal(
+        model.causal_order_, causal_order_sequential(gt.data)
+    )
+    print(f"parallel == sequential: {agree}")
+
+    est = np.abs(model.adjacency_) > 0.1
+    true = gt.adjacency != 0
+    print(f"edges: true={true.sum()} recovered={est.sum()} "
+          f"correct={np.sum(est & true)}")
+
+    print("\n=== Pallas kernel backend (interpret mode on CPU) ===")
+    model_k = DirectLiNGAM(backend="pallas", interpret=True).fit(gt.data)
+    print("pallas order :", model_k.causal_order_)
+    print("orders agree :", np.array_equal(model.causal_order_,
+                                           model_k.causal_order_))
+
+    print("\n=== VarLiNGAM (paper §3.2) ===")
+    x, b0, m1 = simulate_var_stocks(m=2_000, d=20, edge_prob=0.1, seed=1)
+    var_model = VarLiNGAM(lags=1, prune_threshold=0.05).fit(x)
+    th0 = var_model.adjacency_matrices_[0]
+    tp = np.sum((np.abs(th0) > 0.05) & (b0 != 0))
+    print(f"instantaneous edges: true={np.sum(b0 != 0)} "
+          f"recovered-correct={tp}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Causal discovery on stock-like time series (paper §4.2, Fig. 4/Table 2).
+
+    PYTHONPATH=src python examples/stock_varlingam.py [--full]
+
+VAR(1) + instantaneous LiNGAM graph on synthetic S&P-like hourly series
+(d=487 with --full). Prints degree-distribution stats and the top-5
+exerting / receiving indices by total causal effect.
+"""
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="d=487 (paper scale)")
+    args = ap.parse_args()
+    from benchmarks.bench_stocks import run
+
+    res = run(quick=not args.full)
+    print("\nTop exerting nodes :", res["top_exerting"])
+    print("Top receiving nodes:", res["top_receiving"])
+    print("Leaf (holding-co-like) nodes:", res["leaf_nodes"])
+
+
+if __name__ == "__main__":
+    import os
+    import sys
+
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    main()

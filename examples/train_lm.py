@@ -1,0 +1,87 @@
+"""End-to-end training driver: train a ~100M-param LM with the full
+substrate (data pipeline -> AdamW -> fault-tolerant trainer -> checkpoint),
+then serve it with batched requests.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+    PYTHONPATH=src python examples/train_lm.py --arch olmoe-1b-7b --smoke
+
+The default config is a ~100M dense transformer (qwen3-family wiring).
+Interrupt with Ctrl-C: the trainer writes an emergency checkpoint; rerun
+the same command and it resumes exactly where it stopped.
+"""
+
+import argparse
+import logging
+
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig, get_arch
+from repro.serve.engine import Request, ServeEngine
+from repro.train.optimizer import AdamW, cosine_warmup
+from repro.train.trainer import Trainer
+
+logging.basicConfig(level=logging.INFO, format="%(message)s")
+
+# ~100M params: 12L x d512 x ff2048, vocab 16384 -> 12*(4*512^2+3*512*2048)
+# + 2*16384*512 = ~70M wired like qwen3 (GQA + qk-norm).
+LM_100M = ArchConfig(
+    name="lm-100m",
+    family="dense",
+    n_layers=12,
+    d_model=512,
+    n_heads=8,
+    n_kv_heads=4,
+    d_ff=2048,
+    vocab_size=16384,
+    head_dim=64,
+    qk_norm=True,
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="lm-100m")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny config, 20 steps")
+    args = ap.parse_args()
+
+    if args.arch == "lm-100m":
+        cfg = LM_100M
+    else:
+        cfg = get_arch(args.arch, smoke=True)
+    steps = 20 if args.smoke else args.steps
+    if args.smoke:
+        cfg = cfg.replace(n_layers=2, d_model=64, d_ff=128, vocab_size=512,
+                          n_heads=4, n_kv_heads=2, head_dim=16)
+
+    shape = ShapeConfig("train", "train", args.seq, args.batch)
+    opt = AdamW(
+        lr=cosine_warmup(3e-4, warmup=max(steps // 20, 1), total=steps),
+        weight_decay=0.1,
+        state_dtype=cfg.optimizer_dtype,
+    )
+    trainer = Trainer(cfg, shape, optimizer=opt, ckpt_dir=args.ckpt_dir,
+                      ckpt_every=max(steps // 5, 10))
+    state, step, losses = trainer.train(n_steps=steps, log_every=10)
+    print(f"\ntrained to step {step}; loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+
+    print("\n=== serving the trained model ===")
+    engine = ServeEngine(cfg, state.params, batch_size=2,
+                         max_seq=args.seq + 32)
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(prompt=rng.integers(1, cfg.vocab_size, 16).astype(np.int32),
+                max_new_tokens=16)
+        for _ in range(2)
+    ]
+    engine.generate(reqs)
+    for i, r in enumerate(reqs):
+        print(f"request {i}: generated {r.out_tokens}")
+
+
+if __name__ == "__main__":
+    main()

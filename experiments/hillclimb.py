@@ -1,0 +1,422 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""§Perf hillclimbing driver — hypothesis -> change -> measure -> validate.
+
+Cells (chosen from the §Roofline baseline table):
+  A. qwen2-1.5b / prefill_32k   — worst meaningful roofline fraction (2.1%),
+     memory-bound on attention-score materialization; attention cannot TP
+     (12 heads vs 16-way axis).
+  B. jamba-v0.1-52b / decode_32k — most collective-bound cell
+     (collective/bound ratio ~300x): FSDP all-gathers at decode.
+  C. lingam-1m-2048 / ordering   — the paper's own technique at scale,
+     compute-bound.
+  D. olmoe-1b-7b / train_4k      — bonus: EP all-to-all bound MoE training.
+
+Each variant records: hypothesis, predicted delta, analytic before/after,
+HLO evidence (re-lower + collective parse) where the change is code-level,
+and verdict. Output: experiments/hillclimb.md (+ .json).
+
+  PYTHONPATH=src python experiments/hillclimb.py
+"""
+
+import json  # noqa: E402
+import time  # noqa: E402
+
+import numpy as np  # noqa: E402
+
+from repro.analysis import roofline  # noqa: E402
+from repro.analysis.analytic_cost import analytic_collectives, cell_cost  # noqa: E402
+from repro.configs.base import SHAPES, get_arch  # noqa: E402
+
+RESULTS = []
+LINES = ["# §Perf hillclimb log", ""]
+
+
+def emit(s=""):
+    LINES.append(s)
+    print(s)
+
+
+def lm_terms(arch, shape_name, *, cfg_overrides=None, flash=False,
+             seq_shard_kv=False, moe_impl="scatter", grad_bytes=4):
+    cfg = get_arch(arch)
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+    shape = SHAPES[shape_name]
+    cost = cell_cost(cfg, shape, n_model=16, n_batch_shards=16,
+                     moe_impl=moe_impl, flash_attention=flash,
+                     seq_shard_kv=seq_shard_kv)
+    coll = analytic_collectives(cfg, shape, n_model=16, n_batch_shards=16,
+                                grad_dtype_bytes=grad_bytes)
+    coll_dev = sum(coll.values())
+    t = roofline.roofline_terms(cost["flops_per_dev"],
+                                cost["bytes_per_dev"], coll_dev)
+    return t, cost, coll
+
+
+def hlo_evidence(arch, shape_name, **kw):
+    """Re-lower + compile the cell, parse collectives (structure proof)."""
+    import jax  # noqa: F401
+
+    from repro.launch.dryrun import lower_lm_cell
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=False)
+    t0 = time.time()
+    with mesh:
+        lowered, aux = lower_lm_cell(arch, shape_name, mesh, **kw)
+    compiled = lowered.compile()
+    coll = roofline.collective_bytes(compiled.as_text())
+    return {
+        "compile_s": round(time.time() - t0, 1),
+        "hlo_collectives": coll,
+        "hlo_flops_per_dev": compiled.cost_analysis().get("flops", None)
+        if compiled.cost_analysis() else None,
+    }
+
+
+def fmt(t):
+    def s(x):
+        return f"{x*1e3:.2f}ms" if x < 1 else f"{x:.2f}s"
+
+    return (f"compute={s(t['compute_s'])} memory={s(t['memory_s'])} "
+            f"collective={s(t['collective_s'])} -> bound={s(t['bound_s'])} "
+            f"({t['dominant']})")
+
+
+def record(cell, variant, hypothesis, before, after, verdict, extra=None):
+    RESULTS.append({
+        "cell": cell, "variant": variant, "hypothesis": hypothesis,
+        "before": before, "after": after, "verdict": verdict,
+        "extra": extra or {},
+    })
+
+
+# ======================================================================
+# Cell A: qwen2-1.5b prefill_32k
+# ======================================================================
+def cell_a():
+    emit("## Cell A — qwen2-1.5b / prefill_32k (memory-bound)")
+    base_t, base_c, _ = lm_terms("qwen2-1.5b", "prefill_32k")
+    emit(f"- baseline: {fmt(base_t)}")
+    emit(f"  - bytes components (per-dev scaled): attention scores "
+         f"{base_c['bytes_components']['attn']/16/1e12:.2f} TB of "
+         f"{base_c['bytes_per_dev']/1e12:.2f} TB total")
+
+    emit("")
+    emit("**A1 — flash-style chunked attention** (`attn_impl=chunked`, "
+         "implemented in models/layers.py `_sdpa_chunked`)")
+    emit("- Hypothesis: the (B,H,S,S) score materialization is "
+         f"2*32*12*32768^2*2B = {2*32*12*32768**2*2/1e12:.1f} TB global — "
+         "dominating memory; streaming KV chunks with running max/sum "
+         "removes it entirely. Predicted: memory 3.5s -> ~0.2s; bound "
+         "flips to compute.")
+    a1_t, _, _ = lm_terms("qwen2-1.5b", "prefill_32k", flash=True,
+                          cfg_overrides={"attn_impl": "chunked"})
+    emit(f"- after: {fmt(a1_t)}")
+    v = "CONFIRMED" if a1_t["dominant"] == "compute" and \
+        a1_t["memory_s"] < 0.3 * base_t["memory_s"] else "REFUTED"
+    emit(f"- verdict: {v}")
+    record("A", "A1-chunked-attn", "score matmul bytes dominate", fmt(base_t),
+           fmt(a1_t), v)
+
+    emit("")
+    emit("**A2 — pad attention heads 12 -> 16** (same trick as vocab/expert "
+         "padding: 4 zero-output heads make H divisible by the model axis)")
+    emit("- Hypothesis: with 12 heads attention cannot TP-shard, so per-"
+         "device attention FLOPs divide only by 16 batch shards; padding "
+         "to 16 heads costs +33% global attention FLOPs but divides by "
+         "256 — net ~12x lower per-device attention compute. Predicted: "
+         "compute ~2.0s -> ~0.25s; bound flips to collective (~0.23s).")
+    a2_t, a2_c, _ = lm_terms(
+        "qwen2-1.5b", "prefill_32k", flash=True,
+        cfg_overrides={"attn_impl": "chunked", "n_heads": 16},
+    )
+    emit(f"- after: {fmt(a2_t)}")
+    gain = base_t["bound_s"] / a2_t["bound_s"]
+    v = "CONFIRMED" if gain > 8 else "PARTIAL"
+    emit(f"- verdict: {v} — cumulative bound {base_t['bound_s']:.2f}s -> "
+         f"{a2_t['bound_s']*1e3:.0f}ms ({gain:.1f}x)")
+    record("A", "A2-pad-heads", "12 heads block TP", fmt(a1_t), fmt(a2_t), v)
+
+    emit("")
+    emit("**A2 HLO evidence** (re-lower + compile both variants):")
+    ev_base = hlo_evidence("qwen2-1.5b", "prefill_32k")
+    ev_a2 = hlo_evidence(
+        "qwen2-1.5b", "prefill_32k",
+        cfg_overrides={"attn_impl": "chunked", "n_heads": 16},
+    )
+    emit(f"- baseline compile {ev_base['compile_s']}s, collectives "
+         f"{ev_base['hlo_collectives']}")
+    emit(f"- A1+A2  compile {ev_a2['compile_s']}s, collectives "
+         f"{ev_a2['hlo_collectives']}")
+    record("A", "A2-hlo", "", "", "", "", {"base": ev_base, "a2": ev_a2})
+    return base_t, a2_t
+
+
+# ======================================================================
+# Cell B: jamba decode_32k
+# ======================================================================
+def cell_b():
+    emit("")
+    emit("## Cell B — jamba-v0.1-52b / decode_32k (collective-bound)")
+    base_t, base_c, base_coll = lm_terms("jamba-v0.1-52b", "decode_32k")
+    emit(f"- baseline: {fmt(base_t)}")
+    emit(f"  - collective components: { {k: f'{v/1e9:.2f}GB' for k, v in base_coll.items()} }")
+
+    emit("")
+    emit("**B1 — serve-mode sharding: disable FSDP at decode** "
+         "(`fsdp=False`; training keeps ZeRO-3, serving is weight-"
+         "stationary TP)")
+    emit("- Hypothesis: the 257ms collective term is per-step parameter "
+         "all-gather (52B params / 16 model shards, bf16 ~ 13GB/dev-step) "
+         "— pure waste at decode where params never change. Predicted: "
+         "collective -> sub-ms, bound flips to memory (~6ms, KV-cache "
+         "reads at kv=8 heads unshardable on the 16-way axis).")
+    b1_t, b1_c, b1_coll = lm_terms("jamba-v0.1-52b", "decode_32k",
+                                   cfg_overrides={"fsdp": False})
+    emit(f"- after: {fmt(b1_t)}")
+    v = "CONFIRMED" if b1_t["dominant"] == "memory" and \
+        b1_t["bound_s"] < 0.05 * base_t["bound_s"] else "REFUTED"
+    emit(f"- verdict: {v} ({base_t['bound_s']*1e3:.0f}ms -> "
+         f"{b1_t['bound_s']*1e3:.2f}ms)")
+    record("B", "B1-no-fsdp-serve", "FSDP gathers at decode are waste",
+           fmt(base_t), fmt(b1_t), v)
+
+    emit("")
+    emit("**B2 — sequence-sharded KV cache** (`seq_shard_kv=True` in "
+         "dist/sharding.py: kv=8 < 16-way axis, so shard the 32k cache "
+         "sequence over `model`; softmax partials psum)")
+    emit("- Hypothesis: after B1 the bound is KV-cache reads "
+         "(2*128*32768*8*128*2B x 4 attn layers / 16 batch shards = "
+         "4.3GB/dev-step); sharding the sequence 16-way cuts it to "
+         "0.27GB + tiny softmax-partial psums. Predicted bound ~1ms.")
+    b2_t, b2_c, _ = lm_terms("jamba-v0.1-52b", "decode_32k",
+                             cfg_overrides={"fsdp": False},
+                             seq_shard_kv=True)
+    emit(f"- after: {fmt(b2_t)}")
+    gain = base_t["bound_s"] / b2_t["bound_s"]
+    v = "CONFIRMED" if b2_t["bound_s"] < 0.4 * b1_t["bound_s"] else "PARTIAL"
+    emit(f"- verdict: {v} — cumulative {base_t['bound_s']*1e3:.0f}ms -> "
+         f"{b2_t['bound_s']*1e3:.2f}ms ({gain:.0f}x)")
+    record("B", "B2-seq-shard-kv", "KV reads bound after B1", fmt(b1_t),
+           fmt(b2_t), v)
+
+    emit("")
+    emit("**B HLO evidence:**")
+    ev_base = hlo_evidence("jamba-v0.1-52b", "decode_32k")
+    ev_b2 = hlo_evidence("jamba-v0.1-52b", "decode_32k",
+                         cfg_overrides={"fsdp": False}, seq_shard_kv=True)
+    emit(f"- baseline compile {ev_base['compile_s']}s, collectives "
+         f"{ev_base['hlo_collectives']}")
+    emit(f"- B1+B2  compile {ev_b2['compile_s']}s, collectives "
+         f"{ev_b2['hlo_collectives']}")
+    all_gather_drop = (
+        ev_base["hlo_collectives"]["all-gather"]
+        - ev_b2["hlo_collectives"]["all-gather"]
+    )
+    emit(f"- all-gather bytes drop in partitioned HLO: "
+         f"{all_gather_drop/1e6:.1f} MB (per while-iteration; x n_groups "
+         f"at runtime)")
+    record("B", "B-hlo", "", "", "", "", {"base": ev_base, "b2": ev_b2})
+    return base_t, b2_t
+
+
+# ======================================================================
+# Cell C: lingam-1m-2048 (the paper's technique)
+# ======================================================================
+def _lingam_terms(m, d, *, staged=False, passes=3, elem_bytes=4,
+                  nm=16, nb=16, chips=256, flops_per_pair=30.0):
+    """Numeric roofline for the sharded ordering under variants."""
+    stages = []
+    if staged:
+        d_s = d
+        while d_s > 64:
+            stages.append((d_s, d_s - d_s // 2))
+            d_s = d_s // 2
+        stages.append((d_s, d_s))
+    else:
+        stages = [(d, d)]
+    fl = by = co = 0.0
+    m_loc = m / nb
+    for d_s, steps in stages:
+        tile = d_s / nm
+        fl += steps * (2.0 * m * d_s * d_s / chips
+                       + flops_per_pair * m_loc * tile * d_s)
+        by += steps * (passes * m_loc * d_s * elem_bytes)
+        co += steps * (d_s * d_s * 4.0 * (1.0 + 2.0 / nm + 2.0))
+    t = roofline.roofline_terms(fl, by, co)
+    return t, fl, by, co
+
+
+def cell_c():
+    emit("")
+    emit("## Cell C — lingam-1m-2048 / ordering (the paper's technique, "
+         "compute-bound)")
+    base_t, base_fl, base_by, _ = _lingam_terms(1_000_000, 2048)
+    emit(f"- baseline: {fmt(base_t)}")
+
+    emit("")
+    emit("**C1 — active-set compaction** (`causal_order_staged`: halve the "
+         "physical problem every d/2 steps; exact — tests prove identical "
+         "order)")
+    emit("- Hypothesis: the masked fixed-shape scan pays full d^2*m pair "
+         "work all d steps (~m*d^3 total) although the sequential "
+         "algorithm's U-set shrinks; compacting at powers of two cuts "
+         "total pair work to sum(d_s^2 * d_s/2) = (4/7) m*d^3. "
+         "Predicted: compute 5.1s -> ~2.9s; memory also shrinks (slab "
+         "narrows) -> memory-bound next.")
+    c1_t, c1_fl, _, _ = _lingam_terms(1_000_000, 2048, staged=True)
+    emit(f"- after: {fmt(c1_t)} (flops x{c1_fl/base_fl:.3f})")
+    v = "CONFIRMED" if 0.5 < c1_fl / base_fl < 0.62 else "PARTIAL"
+    emit(f"- verdict: {v}")
+    record("C", "C1-staged", "masked scan wastes inactive pairs",
+           fmt(base_t), fmt(c1_t), v)
+
+    emit("")
+    emit("**C1 wall-clock validation (CPU, reduced d=96, m=20000):**")
+    import jax.numpy as jnp
+
+    from repro.core.ordering import causal_order, causal_order_staged
+    from repro.data.simulate import simulate_lingam
+
+    gt = simulate_lingam(m=20_000, d=96, seed=0)
+    x = jnp.asarray(gt.data)
+    causal_order(x).block_until_ready()  # compile
+    t0 = time.perf_counter()
+    o_full = causal_order(x)
+    o_full.block_until_ready()
+    t_full = time.perf_counter() - t0
+    causal_order_staged(x)  # compile stages
+    t0 = time.perf_counter()
+    o_staged = causal_order_staged(x)
+    t_staged = time.perf_counter() - t0
+    same = bool(np.array_equal(np.asarray(o_full), np.asarray(o_staged)))
+    emit(f"- full {t_full:.2f}s vs staged {t_staged:.2f}s "
+         f"({t_full/t_staged:.2f}x), identical order: {same}")
+    record("C", "C1-wallclock", "", f"{t_full:.2f}s", f"{t_staged:.2f}s",
+           "CONFIRMED" if same and t_staged < t_full else "REFUTED")
+
+    emit("")
+    emit("**C2 — fuse standardization into the moment pass** (correlation "
+         "from the raw-X matmul + affine fold: C = D(Craw/m - mu mu^T)D)")
+    emit("- Hypothesis: 3 X-slab passes/step -> 2; memory x2/3.")
+    c2_t, _, _, _ = _lingam_terms(1_000_000, 2048, staged=True, passes=2)
+    emit(f"- after: {fmt(c2_t)}")
+    record("C", "C2-fused-standardize", "one slab pass saved", fmt(c1_t),
+           fmt(c2_t), "CONFIRMED (analytic)")
+
+    emit("")
+    emit("**C3 — bf16 X streaming (fp32 accumulation in the kernel)**")
+    emit("- Hypothesis: slab bytes halve; compute unchanged (kernel "
+         "accumulates fp32 — same moments to ~1e-3, which does not change "
+         "the argmax on tested sims). Memory x1/2.")
+    c3_t, c3_fl, c3_by, _ = _lingam_terms(
+        1_000_000, 2048, staged=True, passes=2, elem_bytes=2
+    )
+    emit(f"- after: {fmt(c3_t)}")
+    gain = base_t["bound_s"] / c3_t["bound_s"]
+    emit(f"- cumulative: {base_t['bound_s']:.2f}s -> {c3_t['bound_s']:.2f}s "
+         f"({gain:.2f}x); dominant: {c3_t['dominant']} — remaining gap to "
+         "peak is the VPU transcendental ceiling (logcosh/exp are not MXU "
+         "work; documented in EXPERIMENTS.md).")
+    record("C", "C3-bf16-stream", "memory halves", fmt(c2_t), fmt(c3_t),
+           "CONFIRMED (analytic)")
+    return base_t, c3_t
+
+
+# ======================================================================
+# Cell D (bonus): olmoe train_4k
+# ======================================================================
+def cell_d():
+    emit("")
+    emit("## Cell D (bonus) — olmoe-1b-7b / train_4k (EP-bound MoE)")
+    base_t, _, base_coll = lm_terms("olmoe-1b-7b", "train_4k")
+    emit(f"- baseline: {fmt(base_t)}; collective parts: "
+         f"{ {k: f'{v/1e9:.1f}GB' for k, v in base_coll.items()} }")
+    emit("**D1 — bf16 gradient all-reduce** (`grad_dtype=bfloat16` in "
+         "train_step; fp32 master accumulate in AdamW)")
+    d1_t, _, d1_coll = lm_terms("olmoe-1b-7b", "train_4k", grad_bytes=2)
+    emit(f"- after: {fmt(d1_t)} — dp_gradreduce "
+         f"{base_coll['dp_gradreduce']/1e9:.2f}GB -> "
+         f"{d1_coll['dp_gradreduce']/1e9:.2f}GB")
+    emit("- verdict: CONFIRMED but NOT the bottleneck — EP all-to-all "
+         f"({base_coll['ep_alltoall']/1e9:.1f}GB/dev) dominates; top-8 "
+         "routing moves each token 8x both ways. The structural fix "
+         "(future work): hierarchical all-to-all within-pod + "
+         "expert-weight gathering when token-bytes >> expert-bytes.")
+    emit("**D2 — einsum vs scatter dispatch (FLOPs sanity):**")
+    d2_t, d2_c, _ = lm_terms("olmoe-1b-7b", "train_4k", moe_impl="einsum")
+    emit(f"- einsum dispatch: {fmt(d2_t)} (compute "
+         f"{d2_t['compute_s']/base_t['compute_s']:.1f}x baseline) — the "
+         "GShard one-hot einsum inflates FLOPs; scatter dispatch (our "
+         "default) avoids it. CONFIRMED scatter as default.")
+    record("D", "D1-bf16-grads", "", fmt(base_t), fmt(d1_t), "CONFIRMED")
+    record("D", "D2-einsum-moe", "", fmt(base_t), fmt(d2_t),
+           "scatter confirmed as default")
+    return base_t, d1_t
+
+
+def main():
+    t0 = time.time()
+    cell_a()
+    cell_b()
+    cell_c()
+    cell_d()
+    cell_e()
+    emit("")
+    emit(f"_(generated in {time.time()-t0:.0f}s)_")
+    with open("experiments/hillclimb.md", "w") as f:
+        f.write("\n".join(LINES))
+    with open("experiments/hillclimb.json", "w") as f:
+        json.dump(RESULTS, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()
+
+
+# ======================================================================
+# Cell E: nemotron-4-340b train_4k — push the best cell toward roofline
+# ======================================================================
+def cell_e():
+    emit("")
+    emit("## Cell E — nemotron-4-340b / train_4k (highest-fraction cell; "
+         "push toward roofline)")
+    base_t, base_c, _ = lm_terms("nemotron-4-340b", "train_4k")
+    emit(f"- baseline (full remat): {fmt(base_t)}")
+    emit("**E1 — selective remat: save matmul outputs** "
+         "(`remat_policy=dots`, jax dots_with_no_batch_dims_saveable)")
+    emit("- Hypothesis: full remat replays the entire fwd (+1x of fwd "
+         "FLOPs = +33% of the train step); matmuls are ~95% of layer "
+         "FLOPs, so saving dot outputs and replaying only elementwise/"
+         "norm work cuts the replay to ~5%: compute x(3.05/4) ~= 0.76x; "
+         "activation bytes rise (0.6 -> 0.8 coeff) but memory is not the "
+         "bound. Predicted: 86.9s -> ~66s, fraction 49% -> ~64%.")
+    e1_t, e1_c, _ = lm_terms(
+        "nemotron-4-340b", "train_4k",
+        cfg_overrides={"remat_policy": "dots"},
+    )
+    emit(f"- after: {fmt(e1_t)}")
+    gain = base_t["bound_s"] / e1_t["bound_s"]
+    v = "CONFIRMED" if 0.70 < e1_t["bound_s"] / base_t["bound_s"] < 0.82 \
+        else "PARTIAL"
+    emit(f"- verdict: {v} ({gain:.2f}x)")
+    record("E", "E1-dots-remat", "full-remat replay is 25% of step",
+           fmt(base_t), fmt(e1_t), v)
+
+    emit("**E1 HLO evidence (lower+compile with the dots policy):**")
+    ev = hlo_evidence("nemotron-4-340b", "train_4k",
+                      cfg_overrides={"remat_policy": "dots"})
+    emit(f"- compile {ev['compile_s']}s OK; collectives "
+         f"{ {k: f'{v/1e9:.2f}GB' for k, v in ev['hlo_collectives'].items()} }")
+    record("E", "E1-hlo", "", "", "", "", ev)
+    return base_t, e1_t
+
+
+

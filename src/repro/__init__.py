@@ -1,0 +1,7 @@
+"""AcceleratedLiNGAM on TPU: a JAX + Pallas causal-discovery framework.
+
+Reproduction and scale-out of "AcceleratedLiNGAM: Learning Causal DAGs at
+the speed of GPUs" (Akinwande & Kolter, 2024) — see DESIGN.md.
+"""
+
+__version__ = "0.1.0"

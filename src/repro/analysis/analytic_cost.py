@@ -1,0 +1,375 @@
+"""Analytic FLOPs / HBM-bytes model per (arch x shape) cell.
+
+Why analytic: XLA's ``cost_analysis()`` counts while-loop bodies ONCE (not
+x trip count) and reports the post-SPMD per-device module — our layer
+stacks are scans, so its FLOPs undercount by ~n_layers. The roofline table
+therefore uses this transparent analytic model (every term is a visible
+formula below), and EXPERIMENTS.md §Roofline reconciles it against
+``cost_analysis`` on a scan-free cell to validate the bookkeeping.
+
+Per-device numbers divide each component by the number of devices that
+actually split that component's work under dist/sharding.py rules (e.g.
+qwen2-1.5b's 12 attention heads cannot shard on the 16-way model axis, so
+attention FLOPs divide only by the batch shards — this asymmetry is real
+and visible in the table).
+
+Byte model (bf16 activations/params-in-compute, fp32 optimizer):
+  * params: fwd+bwd reads (2 x 2N) + grads fp32 (8N) + AdamW moment/param
+    streams (24N, or 16N with bf16 moments) for train; 2N for serve.
+  * activations: ~10 x T x D x 2 bytes per layer fwd+bwd (boundary writes
+    + reads; XLA fuses the interior), x0.6 when remat (fewer saves, more
+    recompute FLOPs instead).
+  * attention score materialization: 2 x B x H x S^2 x 2 bytes (fwd; x2
+    bwd) — the no-flash-kernel cost that dominates prefill_32k.
+  * KV cache: full read per decode step + one-slot write.
+  * logits: 3 x T x V x 2 (fwd write, bwd read/write), /loss_chunk-chunked
+    cells stream it.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import moe as moe_lib
+from repro.models.model import layer_pattern
+
+BF16 = 2
+F32 = 4
+
+
+def _attn_shardable(cfg, n_model=16):
+    return cfg.n_heads > 0 and cfg.n_heads % n_model == 0
+
+
+def _mamba_shardable(cfg, n_model=16):
+    return cfg.ssm_heads % n_model == 0
+
+
+def cell_cost(
+    cfg: ArchConfig,
+    shape: ShapeConfig,
+    *,
+    n_model: int = 16,
+    n_batch_shards: int = 16,
+    moe_impl: str = "scatter",
+    flash_attention: bool = False,
+    cross_kv_cached: bool = False,
+    seq_shard_kv: bool = False,
+) -> Dict[str, float]:
+    """Global + per-device FLOPs and bytes for one cell."""
+    b, s = shape.global_batch, shape.seq_len
+    kind = shape.kind
+    d, hd = cfg.d_model, cfg.head_dim_
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    v = cfg.vocab_padded
+    t = b * (s if kind != "decode" else 1)  # tokens processed this step
+    s_ctx = s  # context length (cache length for decode)
+
+    train = kind == "train"
+    # Units of fwd-equivalent matmul work: 1 fwd + 2 bwd (+ replay when
+    # remat: full replays the whole fwd (+1), "dots" saves matmul outputs
+    # and replays only elementwise/norm work (~+0.05)). Additive, not
+    # multiplicative — remat does NOT re-run the backward.
+    if train:
+        replay = (
+            0.0 if not cfg.remat
+            else (1.0 if cfg.remat_policy == "full" else 0.05)
+        )
+        bwd_mult = 3.0 + replay
+    else:
+        bwd_mult = 1.0
+    remat_mult = 1.0  # kept for variant hooks; folded into bwd_mult above
+
+    pattern = layer_pattern(cfg)
+    reps = cfg.n_layers // len(pattern)
+
+    fl: Dict[str, float] = {}
+    by: Dict[str, float] = {}
+    shards: Dict[str, float] = {}
+    nb = n_batch_shards
+    nm = n_model
+    full = nb * nm
+
+    attn_div = full if _attn_shardable(cfg, nm) else nb
+    mamba_div = full if _mamba_shardable(cfg, nm) else nb
+
+    def add(name, flops, bytes_, div):
+        fl[name] = fl.get(name, 0.0) + flops
+        by[name] = by.get(name, 0.0) + bytes_
+        shards[name] = div
+
+    # ---------------- per-layer components
+    n_attn = sum(reps for p_ in pattern if p_.mixer == "attn")
+    n_cross = sum(reps for p_ in pattern if p_.cross)
+    n_mamba = sum(reps for p_ in pattern if p_.mixer == "mamba")
+    n_mlp = sum(reps for p_ in pattern if p_.ffn == "mlp")
+    n_moe = sum(reps for p_ in pattern if p_.ffn == "moe")
+
+    if n_attn:
+        # KV cache shards over kv heads only when divisible; else over the
+        # sequence axis if seq_shard_kv (§Perf variant), else batch-only.
+        kv_shardable = kv % nm == 0
+        cache_div = full if (kv_shardable or seq_shard_kv) else nb
+        proj_fl = 2.0 * t * d * (h + 2 * kv) * hd + 2.0 * t * h * hd * d
+        if kind == "decode":
+            sdp_fl = 2.0 * 2.0 * b * h * s_ctx * hd
+            cache_by = 2.0 * b * s_ctx * kv * hd * BF16  # read K+V
+            cache_by += 2.0 * b * 1 * kv * hd * BF16     # write one slot
+            score_by = 2.0 * b * h * s_ctx * BF16
+        else:
+            sdp_fl = 2.0 * 2.0 * b * h * s * s * hd  # QK^T + AV (causal ~/2
+            # ignored: XLA computes full scores with mask)
+            cache_by = 2.0 * b * s * kv * hd * BF16 if kind == "prefill" else 0.0
+            score_by = (
+                0.0 if flash_attention else 2.0 * b * h * s * s * BF16
+            )
+        add(
+            "attn",
+            n_attn * (proj_fl + sdp_fl) * bwd_mult * remat_mult,
+            n_attn * score_by * (2.0 if train else 1.0),
+            attn_div,
+        )
+        add("kv_cache", 0.0, n_attn * cache_by, cache_div)
+
+    if n_cross:
+        tc = cfg.n_frontend_tokens
+        proj_fl = 2.0 * t * d * h * hd + 2.0 * t * h * hd * d
+        kvproj = 0.0 if (kind == "decode" and cross_kv_cached) else (
+            2.0 * b * tc * d * 2 * kv * hd
+        )
+        q_rows = t
+        sdp_fl = 2.0 * 2.0 * h * q_rows * tc * hd  # QK^T + AV vs frontend
+        add(
+            "cross_attn",
+            n_cross * (proj_fl + kvproj + sdp_fl) * bwd_mult * remat_mult,
+            n_cross * (2.0 * q_rows * h * tc * BF16),
+            attn_div,
+        )
+
+    if n_mlp:
+        mats = 3.0 if cfg.mlp == "swiglu" else 2.0
+        f = cfg.d_ff
+        add(
+            "mlp",
+            n_mlp * mats * 2.0 * t * d * f * bwd_mult * remat_mult,
+            n_mlp * 2.0 * t * f * BF16,
+            full,
+        )
+
+    if n_moe:
+        e_pad = moe_lib.n_experts_padded(cfg)
+        k = cfg.n_experts_active
+        fe = cfg.d_ff_expert
+        mats = 3.0 if cfg.mlp == "swiglu" else 2.0
+        tk = t * k * cfg.capacity_factor  # dispatched token-slots
+        expert_fl = mats * 2.0 * tk * d * fe
+        router_fl = 2.0 * t * d * e_pad
+        disp_fl = 0.0
+        if moe_impl == "einsum":
+            sg = 512 if t % 512 == 0 else t
+            cap = max(1, int(sg * k / cfg.n_experts * cfg.capacity_factor))
+            disp_fl = 2.0 * 2.0 * t * e_pad * cap * d  # dispatch+combine
+        shared_fl = 0.0
+        if cfg.n_shared_experts:
+            shared_fl = mats * 2.0 * t * d * (cfg.n_shared_experts * fe)
+        add(
+            "moe",
+            n_moe * (expert_fl + router_fl + disp_fl + shared_fl)
+            * bwd_mult * remat_mult,
+            n_moe * (2.0 * tk * d * BF16 * 2),
+            full,
+        )
+
+    if n_mamba:
+        di = cfg.d_inner
+        hm, p, n = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+        p_in = 2 * di + 2 * cfg.ssm_groups * n + hm
+        proj_fl = 2.0 * t * d * p_in + 2.0 * t * di * d
+        conv_fl = 2.0 * t * (di + 2 * cfg.ssm_groups * n) * cfg.ssm_conv
+        if kind == "decode":
+            ssd_fl = 2.0 * 3.0 * b * hm * p * n
+            state_by = 2.0 * 2.0 * b * hm * p * n * BF16  # r/w state
+        else:
+            q = cfg.ssm_chunk
+            ssd_fl = 2.0 * t * hm * (q * (n + p) + 2.0 * n * p)
+            state_by = 2.0 * t * hm * n * BF16
+        add(
+            "mamba",
+            n_mamba * (proj_fl + conv_fl + ssd_fl) * bwd_mult * remat_mult,
+            n_mamba * (2.0 * t * di * BF16 + state_by),
+            mamba_div,
+        )
+
+    # ---------------- encoder (audio)
+    if cfg.encoder_layers and kind != "decode":
+        tc = cfg.n_frontend_tokens
+        te = b * tc
+        enc_fl = cfg.encoder_layers * (
+            2.0 * te * d * (h + 2 * kv) * hd
+            + 2.0 * te * h * hd * d
+            + 4.0 * b * h * tc * tc * hd
+            + 2.0 * 2.0 * te * d * cfg.d_ff
+        )
+        add("encoder", enc_fl * bwd_mult, cfg.encoder_layers * 4.0 * te * d * BF16,
+            nb)
+
+    # ---------------- embeddings + head
+    add("embed", 0.0, t * d * BF16, full)
+    # prefill/decode emit logits only for the last/current position
+    t_head = t if train else b
+    logits_by = 3.0 * t_head * v * BF16 if train else t_head * v * BF16
+    if train and cfg.loss_chunk:
+        logits_by = logits_by / max(s // cfg.loss_chunk, 1) + 2.0 * t * d * BF16
+    add("head", 2.0 * t_head * d * v * bwd_mult, logits_by, full)
+
+    # ---------------- generic activation traffic
+    act_coeff = 10.0 if train else 4.0
+    if cfg.remat:
+        act_coeff *= 0.6 if cfg.remat_policy == "full" else 0.8
+    add("activations", 0.0, cfg.n_layers * act_coeff * t * d * BF16, full)
+
+    # ---------------- parameter + optimizer traffic
+    n_params = _param_count(cfg)
+    if train:
+        opt_by = 24.0 if cfg.optimizer_dtype == "float32" else 16.0
+        par_by = (2 * 2 + 8 + opt_by) * n_params
+        opt_fl = 20.0 * n_params
+    else:
+        par_by = 2.0 * n_params
+        opt_fl = 0.0
+    add("params", opt_fl, par_by, full)
+
+    total_fl = sum(fl.values())
+    total_by = sum(by.values())
+    dev_fl = sum(fl[k] / shards[k] for k in fl)
+    dev_by = sum(by[k] / shards[k] for k in by)
+    return {
+        "flops_global": total_fl,
+        "bytes_global": total_by,
+        "flops_per_dev": dev_fl,
+        "bytes_per_dev": dev_by,
+        "flops_components": fl,
+        "bytes_components": by,
+        "component_shards": shards,
+        "n_params": n_params,
+    }
+
+
+def _param_count(cfg: ArchConfig) -> float:
+    """Closed-form parameter count (matches init_params; validated by
+    tests/test_analytic_cost.py)."""
+    d, hd = cfg.d_model, cfg.head_dim_
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    v = cfg.vocab_padded
+    ln = 2 * d if cfg.norm == "layernorm" else d  # scale (+bias)
+    total = v * d + ln  # embed + ln_f
+    if not cfg.tie_embeddings:
+        total += d * v
+    pattern = layer_pattern(cfg)
+    reps = cfg.n_layers // len(pattern)
+    for p_ in pattern:
+        n = ln  # ln1
+        if p_.mixer == "attn":
+            n += d * (h + 2 * kv) * hd + h * hd * d
+            if cfg.qkv_bias:
+                n += (h + 2 * kv) * hd
+            if cfg.qk_norm:
+                n += 2 * hd
+        else:
+            di = cfg.d_inner
+            p_in = 2 * di + 2 * cfg.ssm_groups * cfg.ssm_state + cfg.ssm_heads
+            n += d * p_in + cfg.ssm_conv * (di + 2 * cfg.ssm_groups * cfg.ssm_state)
+            n += (di + 2 * cfg.ssm_groups * cfg.ssm_state)  # conv_b
+            n += 3 * cfg.ssm_heads + di + di * d
+        if p_.cross:
+            n += ln + d * (h + 2 * kv) * hd + h * hd * d
+            if cfg.qkv_bias:
+                n += (h + 2 * kv) * hd
+            if cfg.qk_norm:
+                n += 2 * hd
+        if p_.ffn == "mlp":
+            mats = 3 if cfg.mlp == "swiglu" else 2
+            n += ln + mats * d * cfg.d_ff
+        elif p_.ffn == "moe":
+            from repro.models.moe import n_experts_padded
+
+            e = n_experts_padded(cfg)
+            mats = 3 if cfg.mlp == "swiglu" else 2
+            n += ln + d * e + e * mats * d * cfg.d_ff_expert
+            if cfg.n_shared_experts:
+                n += mats * d * (cfg.n_shared_experts * cfg.d_ff_expert)
+        total += n * reps
+    if cfg.encoder_layers:
+        mats = 3 if cfg.mlp == "swiglu" else 2
+        per = 2 * ln + d * (h + 2 * kv) * hd + h * hd * d + mats * d * cfg.d_ff
+        if cfg.qkv_bias:
+            per += (h + 2 * kv) * hd
+        total += cfg.encoder_layers * per + ln + cfg.n_frontend_tokens * d
+    if cfg.rope_theta == 0.0:
+        total += 0  # pos embed counted at runtime size (max_seq); skip
+    return float(total)
+
+
+# ---------------------------------------------------------------------------
+# Collective-traffic model (per-device bytes per step).
+#
+# Conventions: "bytes" = per-device payload of each collective op (operand-
+# size convention, matching the HLO parse in roofline.py); ring all-reduce
+# wire overhead (2x(n-1)/n) is folded into the ICI_BW constant's headroom.
+# Sources of traffic under dist/sharding.py rules:
+#   TP   : 2 activation all-reduces per attn/mlp/moe layer fwd (+2x bwd)
+#   FSDP : per-pass parameter all-gather (fwd + bwd)
+#   DP   : gradient all-reduce (grads sharded over model => /nm)
+#   EP   : MoE token all-to-all there-and-back
+#   head : logit logsumexp + embed-gather reduce over model axis
+# ---------------------------------------------------------------------------
+def analytic_collectives(
+    cfg: ArchConfig,
+    shape: ShapeConfig,
+    *,
+    n_model: int = 16,
+    n_batch_shards: int = 16,
+    n_pod: int = 1,
+    grad_dtype_bytes: int = 4,
+) -> Dict[str, float]:
+    b, s = shape.global_batch, shape.seq_len
+    kind = shape.kind
+    train = kind == "train"
+    t_dev = b * (s if kind != "decode" else 1) / n_batch_shards
+    d = cfg.d_model
+    n_params = _param_count(cfg)
+
+    pattern = layer_pattern(cfg)
+    reps = cfg.n_layers // len(pattern)
+    n_attn = sum(reps for p_ in pattern if p_.mixer == "attn")
+    n_cross = sum(reps for p_ in pattern if p_.cross)
+    n_mamba = sum(reps for p_ in pattern if p_.mixer == "mamba")
+    n_mlp = sum(reps for p_ in pattern if p_.ffn == "mlp")
+    n_moe = sum(reps for p_ in pattern if p_.ffn == "moe")
+
+    out: Dict[str, float] = {}
+    bwd = 2.0 if train else 1.0  # fwd=1, +1 bwd mirror
+
+    # TP activation all-reduces (only layers whose weights actually shard).
+    tp_layers = 0
+    if _attn_shardable(cfg, n_model):
+        tp_layers += n_attn + n_cross
+    if _mamba_shardable(cfg, n_model):
+        tp_layers += n_mamba
+    tp_layers += n_mlp + n_moe  # d_ff / experts always shard (padded)
+    if n_model > 1:
+        out["tp_allreduce"] = tp_layers * 2.0 * t_dev * d * BF16 * bwd
+        # vocab-sharded head: logsumexp partials + gathered embed rows
+        out["head_allreduce"] = (t_dev * d * BF16 + t_dev * F32) * bwd
+    # FSDP parameter all-gathers
+    if cfg.fsdp and n_batch_shards > 1:
+        out["fsdp_allgather"] = (1.0 + bwd) * 0.5 * 2.0 * n_params * BF16 / n_model
+    # DP gradient all-reduce
+    if train and n_batch_shards * n_pod > 1:
+        out["dp_gradreduce"] = 2.0 * n_params * grad_dtype_bytes / n_model
+    # EP all-to-all
+    if n_moe and n_model > 1:
+        k = cfg.n_experts_active
+        out["ep_alltoall"] = n_moe * 2.0 * t_dev * k * d * BF16 * bwd
+    return out

@@ -1,0 +1,161 @@
+"""Architecture config system: one frozen dataclass per assigned arch.
+
+Every architecture is selectable via ``--arch <id>`` in the launchers; the
+registry maps ids to (full config, reduced smoke config, input shapes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+
+def round_up(x: int, k: int) -> int:
+    return ((x + k - 1) // k) * k
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+
+    # attention
+    head_dim: Optional[int] = None
+    rope_theta: float = 10_000.0
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    attn_logit_softcap: float = 0.0
+    attn_impl: str = "dense"  # dense | chunked (flash-style, no S^2 in HBM)
+    attn_chunk: int = 1024
+
+    # MLP
+    mlp: str = "swiglu"  # swiglu | squared_relu | gelu
+    norm: str = "rmsnorm"  # rmsnorm | layernorm
+
+    # MoE
+    n_experts: int = 0
+    n_experts_active: int = 0
+    n_shared_experts: int = 0
+    d_ff_expert: int = 0
+    moe_every: int = 1  # MoE MLP on layers where (layer % moe_every == moe_offset)
+    moe_offset: int = 0
+    capacity_factor: float = 1.25
+
+    # SSM (mamba2-style SSD)
+    ssm_state: int = 0
+    ssm_headdim: int = 64
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_groups: int = 1
+    ssm_chunk: int = 256
+
+    # hybrid (jamba): 1 attention layer per `attn_every` layers (0 = all attn)
+    attn_every: int = 0
+
+    # encoder-decoder / multimodal frontends (stubs provide embeddings)
+    encoder_layers: int = 0
+    n_frontend_tokens: int = 0  # encoder frames (audio) or image tokens (vlm)
+    cross_attn_every: int = 0   # 1 cross-attn layer per k decoder layers
+
+    # numerics / memory knobs
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    optimizer_dtype: str = "float32"
+    remat: bool = False
+    remat_policy: str = "full"  # full (nothing_saveable) | dots (save matmuls)
+    fsdp: bool = False
+    loss_chunk: int = 0  # 0 = unchunked cross-entropy; else seq-chunk size
+
+    # ---- derived ----
+    @property
+    def head_dim_(self) -> int:
+        if self.head_dim is not None:
+            return self.head_dim
+        return self.d_model // max(self.n_heads, 1)
+
+    @property
+    def vocab_padded(self) -> int:
+        """Pad vocab to a lane-aligned multiple of 128 (MXU-friendly; also
+        makes every assigned vocab divisible by the 16-way model axis)."""
+        return round_up(self.vocab_size, 128)
+
+    @property
+    def d_inner(self) -> int:  # mamba
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_headdim
+
+    def replace(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str        # train_4k | prefill_32k | decode_32k | long_500k
+    kind: str        # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeConfig("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeConfig("long_500k", "decode", 524_288, 1),
+}
+
+# Families that support the sub-quadratic long_500k decode shape.
+LONG_CONTEXT_FAMILIES = ("ssm", "hybrid")
+
+_REGISTRY: Dict[str, Tuple[ArchConfig, ArchConfig]] = {}
+
+
+def register(full: ArchConfig, smoke: ArchConfig) -> ArchConfig:
+    _REGISTRY[full.name] = (full, smoke)
+    return full
+
+
+def get_arch(name: str, smoke: bool = False) -> ArchConfig:
+    _ensure_loaded()
+    full, small = _REGISTRY[name]
+    return small if smoke else full
+
+
+def list_archs():
+    _ensure_loaded()
+    return sorted(_REGISTRY.keys())
+
+
+def supported_shapes(cfg: ArchConfig):
+    out = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.family in LONG_CONTEXT_FAMILIES:
+        out.append("long_500k")
+    return out
+
+
+def _ensure_loaded():
+    # Import the per-arch modules for their registration side-effects.
+    if _REGISTRY:
+        return
+    from repro.configs import (  # noqa: F401
+        glm4_9b,
+        jamba_v0_1_52b,
+        llama_3_2_vision_90b,
+        mamba2_2_7b,
+        nemotron_4_340b,
+        olmoe_1b_7b,
+        qwen2_1_5b,
+        qwen2_moe_a2_7b,
+        qwen3_1_7b,
+        whisper_base,
+    )

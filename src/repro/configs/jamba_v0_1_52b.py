@@ -1,0 +1,59 @@
+"""jamba-v0.1-52b [hybrid] — Mamba+attention 1:7 interleave, MoE 16e top-2.
+[arXiv:2403.19887; hf]
+32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=65536, MoE every 2 layers.
+Layer l is attention iff (l % 8 == 4) — 4 attention layers in 32 (1:7);
+SSM layers use the mamba2-style SSD block (DESIGN.md notes this
+adaptation; Jamba v0.1 uses mamba1 with d_state=16, we keep d_state=16).
+Runs long_500k: only 4 attention layers hold 500k KV.
+"""
+
+from repro.configs.base import ArchConfig, register
+
+FULL = ArchConfig(
+    name="jamba-v0.1-52b",
+    family="hybrid",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab_size=65536,
+    attn_every=8,
+    n_experts=16,
+    n_experts_active=2,
+    d_ff_expert=14336,
+    moe_every=2,
+    moe_offset=1,
+    ssm_state=16,
+    ssm_headdim=64,
+    ssm_conv=4,
+    ssm_expand=2,
+    ssm_groups=1,
+    ssm_chunk=256,
+    fsdp=True,
+    remat=True,
+)
+
+SMOKE = ArchConfig(
+    name="jamba-v0.1-52b",
+    family="hybrid",
+    n_layers=8,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=128,
+    vocab_size=512,
+    attn_every=8,
+    n_experts=4,
+    n_experts_active=2,
+    d_ff_expert=128,
+    moe_every=2,
+    moe_offset=1,
+    ssm_state=16,
+    ssm_headdim=16,
+    ssm_conv=4,
+    ssm_expand=2,
+    ssm_chunk=32,
+)
+
+register(FULL, SMOKE)

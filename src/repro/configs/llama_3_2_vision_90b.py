@@ -1,0 +1,40 @@
+"""llama-3.2-vision-90b [vlm] — cross-attn image layers.
+[hf:meta-llama/Llama-3.2-11B-Vision; unverified]
+100L d_model=8192 64H (GQA kv=8) d_ff=28672 vocab=128256.
+Vision frontend is a stub: input_specs() provides precomputed patch
+embeddings (B, n_frontend_tokens, d_model); every 5th layer cross-attends.
+"""
+
+from repro.configs.base import ArchConfig, register
+
+FULL = ArchConfig(
+    name="llama-3.2-vision-90b",
+    family="vlm",
+    n_layers=100,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=28672,
+    vocab_size=128256,
+    rope_theta=500_000.0,
+    cross_attn_every=5,
+    n_frontend_tokens=2048,
+    fsdp=True,
+    remat=True,
+    optimizer_dtype="float32",
+)
+
+SMOKE = ArchConfig(
+    name="llama-3.2-vision-90b",
+    family="vlm",
+    n_layers=10,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=128,
+    vocab_size=512,
+    cross_attn_every=5,
+    n_frontend_tokens=16,
+)
+
+register(FULL, SMOKE)

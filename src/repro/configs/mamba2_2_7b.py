@@ -1,0 +1,43 @@
+"""mamba2-2.7b [ssm] — SSD (state-space duality), attention-free.
+[arXiv:2405.21060; unverified]
+64L d_model=2560 vocab=50280 (padded to 50304), ssm_state=128,
+headdim=64 -> d_inner=5120, 80 SSM heads. Runs long_500k (O(1) state).
+"""
+
+from repro.configs.base import ArchConfig, register
+
+FULL = ArchConfig(
+    name="mamba2-2.7b",
+    family="ssm",
+    n_layers=64,
+    d_model=2560,
+    n_heads=0,
+    n_kv_heads=0,
+    d_ff=0,
+    vocab_size=50280,
+    ssm_state=128,
+    ssm_headdim=64,
+    ssm_conv=4,
+    ssm_expand=2,
+    ssm_groups=1,
+    ssm_chunk=256,
+)
+
+SMOKE = ArchConfig(
+    name="mamba2-2.7b",
+    family="ssm",
+    n_layers=2,
+    d_model=64,
+    n_heads=0,
+    n_kv_heads=0,
+    d_ff=0,
+    vocab_size=512,
+    ssm_state=16,
+    ssm_headdim=16,
+    ssm_conv=4,
+    ssm_expand=2,
+    ssm_groups=1,
+    ssm_chunk=32,
+)
+
+register(FULL, SMOKE)

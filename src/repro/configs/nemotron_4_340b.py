@@ -1,0 +1,39 @@
+"""nemotron-4-340b [dense] — GQA, squared-ReLU MLP. [arXiv:2402.16819]
+96L d_model=18432 96H (GQA kv=8) d_ff=73728 vocab=256000.
+Largest assigned arch: FSDP + remat + bf16 optimizer states to fit v5e HBM
+(see EXPERIMENTS.md §Dry-run memory table).
+"""
+
+from repro.configs.base import ArchConfig, register
+
+FULL = ArchConfig(
+    name="nemotron-4-340b",
+    family="dense",
+    n_layers=96,
+    d_model=18432,
+    n_heads=96,
+    n_kv_heads=8,
+    d_ff=73728,
+    vocab_size=256000,
+    mlp="squared_relu",
+    norm="layernorm",
+    fsdp=True,
+    remat=True,
+    optimizer_dtype="bfloat16",
+    loss_chunk=512,
+)
+
+SMOKE = ArchConfig(
+    name="nemotron-4-340b",
+    family="dense",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=256,
+    vocab_size=512,
+    mlp="squared_relu",
+    norm="layernorm",
+)
+
+register(FULL, SMOKE)

@@ -1,0 +1,39 @@
+"""olmoe-1b-7b [moe] — 64 experts top-8, qk-norm. [arXiv:2409.02060; hf]
+16L d_model=2048 16H (kv=16) expert d_ff=1024 vocab=50304, all layers MoE.
+"""
+
+from repro.configs.base import ArchConfig, register
+
+FULL = ArchConfig(
+    name="olmoe-1b-7b",
+    family="moe",
+    n_layers=16,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=1024,
+    vocab_size=50304,
+    qk_norm=True,
+    n_experts=64,
+    n_experts_active=8,
+    d_ff_expert=1024,
+    moe_every=1,
+)
+
+SMOKE = ArchConfig(
+    name="olmoe-1b-7b",
+    family="moe",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=64,
+    vocab_size=512,
+    qk_norm=True,
+    n_experts=8,
+    n_experts_active=2,
+    d_ff_expert=64,
+    moe_every=1,
+)
+
+register(FULL, SMOKE)

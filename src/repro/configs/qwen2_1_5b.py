@@ -1,0 +1,33 @@
+"""qwen2-1.5b [dense] — GQA, QKV bias. [arXiv:2407.10671; hf]
+28L d_model=1536 12H (GQA kv=2) d_ff=8960 vocab=151936.
+12 heads is not divisible by the 16-way model axis: attention params stay
+replicated and TP flows through d_ff / vocab (see dist/sharding.py).
+"""
+
+from repro.configs.base import ArchConfig, register
+
+FULL = ArchConfig(
+    name="qwen2-1.5b",
+    family="dense",
+    n_layers=28,
+    d_model=1536,
+    n_heads=12,
+    n_kv_heads=2,
+    d_ff=8960,
+    vocab_size=151936,
+    qkv_bias=True,
+)
+
+SMOKE = ArchConfig(
+    name="qwen2-1.5b",
+    family="dense",
+    n_layers=2,
+    d_model=48,
+    n_heads=3,
+    n_kv_heads=1,
+    d_ff=128,
+    vocab_size=512,
+    qkv_bias=True,
+)
+
+register(FULL, SMOKE)

@@ -1,0 +1,45 @@
+"""qwen2-moe-a2.7b [moe] — 60 routed experts top-4 + 4 shared experts.
+[hf:Qwen/Qwen1.5-MoE-A2.7B; hf]
+24L d_model=2048 16H (kv=16) expert d_ff=1408 vocab=151936.
+60 routed experts are padded to 64 inside the MoE layer (router logits of
+padded experts pinned to -inf) so the expert dim shards 16-way; the 4
+shared experts run as a dense MLP of width 4*1408=5632.
+"""
+
+from repro.configs.base import ArchConfig, register
+
+FULL = ArchConfig(
+    name="qwen2-moe-a2.7b",
+    family="moe",
+    n_layers=24,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=1408,
+    vocab_size=151936,
+    qkv_bias=True,
+    n_experts=60,
+    n_experts_active=4,
+    n_shared_experts=4,
+    d_ff_expert=1408,
+    moe_every=1,
+)
+
+SMOKE = ArchConfig(
+    name="qwen2-moe-a2.7b",
+    family="moe",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=64,
+    vocab_size=512,
+    qkv_bias=True,
+    n_experts=6,
+    n_experts_active=2,
+    n_shared_experts=2,
+    d_ff_expert=64,
+    moe_every=1,
+)
+
+register(FULL, SMOKE)

@@ -1,0 +1,46 @@
+"""whisper-base [audio] — encoder-decoder, conv frontend (stub).
+[arXiv:2212.04356; unverified]
+6L enc + 6L dec, d_model=512 8H d_ff=2048 vocab=51865 (padded to 51968).
+The audio conv frontend is a stub: input_specs() provides precomputed
+frame embeddings (B, 1500, d_model). Decoder uses learned positional
+embeddings (whisper has no RoPE); 8 heads < 16-way model axis -> attention
+replicated, TP flows through d_ff/vocab.
+"""
+
+from repro.configs.base import ArchConfig, register
+
+FULL = ArchConfig(
+    name="whisper-base",
+    family="audio",
+    n_layers=6,
+    d_model=512,
+    n_heads=8,
+    n_kv_heads=8,
+    d_ff=2048,
+    vocab_size=51865,
+    mlp="gelu",
+    norm="layernorm",
+    encoder_layers=6,
+    n_frontend_tokens=1500,
+    cross_attn_every=1,  # every decoder layer cross-attends (enc-dec)
+    rope_theta=0.0,      # 0 -> learned absolute positions
+)
+
+SMOKE = ArchConfig(
+    name="whisper-base",
+    family="audio",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=128,
+    vocab_size=512,
+    mlp="gelu",
+    norm="layernorm",
+    encoder_layers=2,
+    n_frontend_tokens=16,
+    cross_attn_every=1,
+    rope_theta=0.0,
+)
+
+register(FULL, SMOKE)

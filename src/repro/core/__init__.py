@@ -1,0 +1,8 @@
+from .direct_lingam import DirectLiNGAM, fit_direct_lingam  # noqa: F401
+from .ordering import (  # noqa: F401
+    causal_order,
+    causal_order_staged,
+    ordering_scores,
+)
+from .pruning import estimate_adjacency  # noqa: F401
+from .var_lingam import VarLiNGAM, fit_var_lingam  # noqa: F401

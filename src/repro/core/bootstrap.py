@@ -1,0 +1,69 @@
+"""Bootstrap confidence for discovered edges (paper §4 applications run
+this in practice: gene networks / stock graphs are reported with edge
+stability, not single point estimates).
+
+Resamples rows with replacement, refits DirectLiNGAM per resample (the
+accelerated ordering makes this affordable — the whole point of the
+paper), and returns edge-presence probabilities plus coefficient
+means/stds. Deterministic under a seed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core.direct_lingam import DirectLiNGAM
+
+
+@dataclasses.dataclass
+class BootstrapResult:
+    edge_prob: np.ndarray    # (d, d) P(|B_ij| > threshold)
+    coef_mean: np.ndarray    # (d, d) mean coefficient over resamples
+    coef_std: np.ndarray     # (d, d)
+    n_sampling: int
+
+    def stable_edges(self, min_prob: float = 0.7):
+        """[(i, j, prob, mean_coef)] sorted by probability."""
+        idx = np.argwhere(self.edge_prob >= min_prob)
+        out = [
+            (int(i), int(j), float(self.edge_prob[i, j]),
+             float(self.coef_mean[i, j]))
+            for i, j in idx
+        ]
+        return sorted(out, key=lambda t: -t[2])
+
+
+def bootstrap_lingam(
+    x,
+    n_sampling: int = 20,
+    threshold: float = 0.05,
+    seed: int = 0,
+    backend: str = "blocked",
+    model: Optional[DirectLiNGAM] = None,
+) -> BootstrapResult:
+    x = np.asarray(x, dtype=np.float32)
+    m, d = x.shape
+    rng = np.random.default_rng(seed)
+    present = np.zeros((d, d))
+    coefs = np.zeros((n_sampling, d, d), dtype=np.float32)
+    for s in range(n_sampling):
+        idx = rng.integers(0, m, size=m)
+        mdl = model or DirectLiNGAM(backend=backend)
+        mdl = DirectLiNGAM(
+            backend=backend,
+            prune_method=mdl.prune_method,
+            prune_threshold=mdl.prune_threshold,
+        )
+        mdl.fit(x[idx])
+        b = mdl.adjacency_
+        coefs[s] = b
+        present += (np.abs(b) > threshold).astype(float)
+    return BootstrapResult(
+        edge_prob=present / n_sampling,
+        coef_mean=coefs.mean(axis=0),
+        coef_std=coefs.std(axis=0),
+        n_sampling=n_sampling,
+    )

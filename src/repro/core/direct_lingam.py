@@ -1,0 +1,56 @@
+"""DirectLiNGAM (Shimizu et al., 2011) — the paper's accelerated target.
+
+Public API:
+
+    model = DirectLiNGAM(backend="pallas").fit(X)
+    model.causal_order_   # (d,) — position p holds the variable index
+    model.adjacency_      # (d, d) — B[i, j] = direct effect of x_j on x_i
+
+The algorithm is unchanged from the sequential version (identical
+identifiability guarantees, as the paper stresses); only the execution is
+parallel. ``backend`` picks the pairwise-moment implementation:
+"blocked" (vectorized jnp), "pallas" (TPU kernel; interpret=True on CPU),
+or "ref" (small-problem oracle).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import ordering, pruning
+
+
+@dataclasses.dataclass
+class DirectLiNGAM:
+    backend: str = "blocked"
+    interpret: bool = True
+    prune_method: str = "ols"
+    prune_threshold: float = 0.0
+    prune_kwargs: dict = dataclasses.field(default_factory=dict)
+
+    causal_order_: Optional[np.ndarray] = None
+    adjacency_: Optional[np.ndarray] = None
+
+    def fit(self, x) -> "DirectLiNGAM":
+        x = jnp.asarray(x, dtype=jnp.float32)
+        order = ordering.causal_order(
+            x, backend=self.backend, interpret=self.interpret
+        )
+        b = pruning.estimate_adjacency(
+            x,
+            order,
+            method=self.prune_method,
+            threshold=self.prune_threshold,
+            **self.prune_kwargs,
+        )
+        self.causal_order_ = np.asarray(order)
+        self.adjacency_ = np.asarray(b)
+        return self
+
+
+def fit_direct_lingam(x, **kw) -> DirectLiNGAM:
+    return DirectLiNGAM(**kw).fit(x)

@@ -1,0 +1,75 @@
+"""Entropy / mutual-information measures used by the LiNGAM causal ordering.
+
+Implements the maximum-entropy approximation of differential entropy from
+Hyvarinen (1998), as used by DirectLiNGAM (Shimizu et al., 2011) and the
+paper's Algorithm 1:
+
+    H(u) ~= (1 + log(2*pi)) / 2
+            - k1 * (E[log cosh u] - gamma)^2
+            - k2 * (E[u * exp(-u^2 / 2)])^2
+
+for a standardized (zero-mean, unit-variance) random variable ``u``.
+
+The two expectations E[log cosh u] and E[u exp(-u^2/2)] are the *only*
+sample-dependent quantities; everything else is O(1) postprocessing. The
+Pallas kernel in ``repro.kernels`` computes exactly these two moments for
+all variable pairs' regression residuals.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Constants of the Hyvarinen entropy approximation (same values as the
+# reference lingam package and the paper's implementation).
+K1 = 79.047
+K2 = 7.4129
+GAMMA = 0.37457
+
+# H(standard normal) = (1 + log(2 pi)) / 2
+_H_GAUSS = 0.5 * (1.0 + jnp.log(2.0 * jnp.pi))
+
+
+def entropy_from_moments(m_logcosh, m_uexp):
+    """Entropy approximation from the two nonlinear moments.
+
+    Args:
+      m_logcosh: E[log cosh u]   (any broadcastable shape)
+      m_uexp:    E[u exp(-u^2/2)]
+    Returns:
+      H(u) with the same shape.
+    """
+    return (
+        _H_GAUSS
+        - K1 * (m_logcosh - GAMMA) ** 2
+        - K2 * m_uexp**2
+    )
+
+
+def nonlinear_moments(u, axis=-1):
+    """E[log cosh u] and E[u exp(-u^2/2)] along ``axis``.
+
+    ``log cosh`` is computed in the overflow-safe form
+    ``|u| + log1p(exp(-2|u|)) - log 2``.
+    """
+    au = jnp.abs(u)
+    logcosh = au + jnp.log1p(jnp.exp(-2.0 * au)) - jnp.log(2.0)
+    m1 = jnp.mean(logcosh, axis=axis)
+    m2 = jnp.mean(u * jnp.exp(-0.5 * u * u), axis=axis)
+    return m1, m2
+
+
+def entropy(u, axis=-1):
+    """H(u) of standardized samples along ``axis``."""
+    m1, m2 = nonlinear_moments(u, axis=axis)
+    return entropy_from_moments(m1, m2)
+
+
+def diff_mutual_info(h_xi, h_xj, h_ri_j, h_rj_i):
+    """Difference of mutual information for the pair (i, j).
+
+    Matches the paper's ``_diff_mutual_info``:
+        (H(x_j) + H(r_i<-j / std)) - (H(x_i) + H(r_j<-i / std))
+    Positive => i is more plausibly upstream of j.
+    """
+    return (h_xj + h_ri_j) - (h_xi + h_rj_i)

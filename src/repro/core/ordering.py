@@ -1,0 +1,179 @@
+"""Causal ordering (Algorithm 1 of the paper) — vectorized, masked, jit-able.
+
+The paper parallelizes the pair loop of ``search_causal_order`` on GPU. The
+TPU-native formulation here goes one step further and expresses the *entire*
+ordering loop as a ``lax.scan`` of d identical masked steps over a
+static-shape (m, d) buffer:
+
+  step(X, active):
+    1. standardize active columns (ddof=0)
+    2. C = X_std^T X_std / m                        (one MXU matmul)
+    3. (M1, M2) = pairwise residual moments         (Pallas kernel / jnp)
+    4. entropies + MI differences -> k_list scores  (O(d^2) postprocess)
+    5. root = argmax_{active} k_list                (ties -> lowest index,
+                                                     matching np.argmax)
+    6. residualize: x_j <- x_j - (cov(x_j, x_root)/var(x_root)) x_root
+
+Inactive columns are masked out of the scores; their data still flows
+through the moment computation (static shapes), which preserves the O(d^2 m)
+per-step cost of the sequential algorithm while making every step identical
+for XLA. Step 6 is the paper's "sequential 4%" — here it is a vectorized
+rank-1 update, so the parallel fraction exceeds the paper's 0.96.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from . import measures
+
+_NEG_INF = jnp.float32(-1e30)
+EPS = 1e-12
+
+
+def ordering_scores(x, active, *, backend="blocked", interpret=True):
+    """k_list scores for one ordering step.
+
+    Args:
+      x:      (m, d) current (partially residualized) data.
+      active: (d,) bool mask of variables still to be ordered.
+    Returns:
+      (k_list, x_std, c): scores with -inf at inactive entries; the
+      standardized data and correlation (reused by the residual update).
+    """
+    m, d = x.shape
+    x_std = ops.standardize(x)
+    c = ops.correlation(x_std)
+    m1, m2 = ops.pairwise_moments(
+        x_std, c, backend=backend, interpret=interpret
+    )
+
+    # Column entropies H(x_i).
+    cm1, cm2 = measures.nonlinear_moments(x_std, axis=0)
+    h_col = measures.entropy_from_moments(cm1, cm2)  # (d,)
+
+    # Residual entropies H(r_{i<-j}/std).
+    h_res = measures.entropy_from_moments(m1, m2)  # (d, d), [i, j]
+
+    # diff_mi[i, j] = (H(x_j) + H(r_i<-j)) - (H(x_i) + H(r_j<-i))
+    diff = (h_col[None, :] + h_res) - (h_col[:, None] + h_res.T)
+
+    pair_ok = active[:, None] & active[None, :]
+    pair_ok &= ~jnp.eye(d, dtype=bool)
+    contrib = jnp.where(pair_ok, jnp.minimum(0.0, diff) ** 2, 0.0)
+    k_list = -jnp.sum(contrib, axis=1)
+    k_list = jnp.where(active, k_list, _NEG_INF)
+    return k_list, x_std, c
+
+
+def _ordering_step(x, active, *, backend, interpret):
+    k_list, _, _ = ordering_scores(
+        x, active, backend=backend, interpret=interpret
+    )
+    root = jnp.argmax(k_list)
+
+    # Residualize every other active column on the root column of the
+    # *unstandardized* working data (matches the sequential reference).
+    xr = x[:, root]
+    var_r = jnp.maximum(jnp.var(xr), EPS)
+    mean_r = jnp.mean(xr)
+    cov = jnp.mean(x * xr[:, None], axis=0) - jnp.mean(x, axis=0) * mean_r
+    coef = cov / var_r  # (d,)
+    update = jnp.where(active & (jnp.arange(x.shape[1]) != root), coef, 0.0)
+    x_new = x - xr[:, None] * update[None, :]
+
+    active_new = active.at[root].set(False)
+    return x_new, active_new, root
+
+
+@functools.partial(
+    jax.jit, static_argnames=("backend", "interpret", "unroll")
+)
+def causal_order(x, *, backend="blocked", interpret=True, unroll=False):
+    """Full causal ordering of all d variables.
+
+    Returns ``order`` (d,) int32 — order[p] is the variable at causal
+    position p (order[0] = most exogenous).
+    """
+    m, d = x.shape
+    x = x.astype(jnp.float32)
+
+    def body(carry, _):
+        xc, act = carry
+        xc, act, root = _ordering_step(
+            xc, act, backend=backend, interpret=interpret
+        )
+        return (xc, act), root
+
+    init = (x, jnp.ones((d,), dtype=bool))
+    if unroll:
+        order = []
+        carry = init
+        for _ in range(d):
+            carry, root = body(carry, None)
+            order.append(root)
+        return jnp.stack(order).astype(jnp.int32)
+    (_, _), order = jax.lax.scan(body, init, None, length=d)
+    return order.astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_steps", "backend", "interpret")
+)
+def _partial_order(x, active, n_steps, *, backend, interpret):
+    """Run ``n_steps`` ordering steps; return (roots, x, active)."""
+
+    def body(carry, _):
+        xc, act = carry
+        xc, act, root = _ordering_step(
+            xc, act, backend=backend, interpret=interpret
+        )
+        return (xc, act), root
+
+    (x, active), roots = jax.lax.scan(
+        body, (x, active), None, length=n_steps
+    )
+    return roots.astype(jnp.int32), x, active
+
+
+def causal_order_staged(
+    x, *, backend="blocked", interpret=True, min_stage=32
+):
+    """Causal ordering with active-set compaction (§Perf optimization).
+
+    The masked scan in :func:`causal_order` pays the full d^2*m pair cost
+    at every one of its d steps even though only the active set matters —
+    total ~ m*d^3. This variant halves the *physical* problem every d/2
+    steps by gathering the still-active columns into a smaller buffer
+    (host-driven re-jit per stage, exact same algorithm => identical
+    order), cutting total pair work to ~ m*d^3 * 4/7 (1.75x fewer FLOPs).
+    The sequential CPU implementation gets this for free (its U set
+    shrinks); this recovers it for the fixed-shape TPU formulation.
+    """
+    import numpy as np
+
+    x = jnp.asarray(x, jnp.float32)
+    d = x.shape[1]
+    remaining = np.arange(d)
+    order = []
+    active = jnp.ones((d,), dtype=bool)
+    while len(remaining) > min_stage:
+        d_cur = int(x.shape[1])
+        n_steps = d_cur - d_cur // 2
+        roots, x, active = _partial_order(
+            x, active, n_steps, backend=backend, interpret=interpret
+        )
+        roots = np.asarray(roots)
+        order.extend(remaining[roots].tolist())
+        keep = np.asarray(~np.isin(np.arange(d_cur), roots)).nonzero()[0]
+        x = x[:, keep]
+        remaining = remaining[keep]
+        active = jnp.ones((len(keep),), dtype=bool)
+    if len(remaining):
+        tail = causal_order(x, backend=backend, interpret=interpret)
+        order.extend(remaining[np.asarray(tail)].tolist())
+    return jnp.asarray(order, dtype=jnp.int32)

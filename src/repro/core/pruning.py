@@ -1,0 +1,113 @@
+"""Adjacency estimation given a causal order.
+
+After DirectLiNGAM establishes the order k(.), the connection strengths are
+estimated by regressing each variable on its predecessors. The paper leaves
+this on CPU (numpy/sklearn, ~4% of runtime); here it is vectorized as a
+masked *batched* OLS (one vmapped linear solve per variable) plus an
+optional adaptive-lasso refinement (FISTA on the weighted-L1 problem, the
+jax-native equivalent of lingam's LassoLarsIC step).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-9
+
+
+def _pred_mask(order):
+    """(d, d) bool: mask[i, j] = True iff j precedes i in the causal order."""
+    d = order.shape[0]
+    pos = jnp.zeros((d,), jnp.int32).at[order].set(jnp.arange(d, dtype=jnp.int32))
+    return pos[None, :] < pos[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def ols_adjacency(x, order):
+    """Batched masked OLS: B[i, j] = coefficient of x_j in the regression of
+    x_i on its causal predecessors. Rows/cols outside the predecessor set are
+    pinned via an identity-augmented system so one vmapped solve handles all
+    variables with static shapes.
+    """
+    m, d = x.shape
+    xc = x - jnp.mean(x, axis=0, keepdims=True)
+    cov = (xc.T @ xc) / m  # (d, d)
+    mask = _pred_mask(order)  # (d, d)
+
+    def solve_one(mask_i, cov_xi):
+        mm = mask_i[:, None] & mask_i[None, :]
+        a = jnp.where(mm, cov, 0.0) + jnp.diag(jnp.where(mask_i, EPS, 1.0))
+        b = jnp.where(mask_i, cov_xi, 0.0)
+        return jnp.linalg.solve(a, b)
+
+    return jax.vmap(solve_one)(mask, cov)
+
+
+def _soft_threshold(z, t):
+    return jnp.sign(z) * jnp.maximum(jnp.abs(z) - t, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("n_steps",))
+def adaptive_lasso_adjacency(x, order, lam=0.01, gamma=1.0, n_steps=400):
+    """Adaptive lasso via FISTA, weights w_j = 1/|b_ols_j|^gamma.
+
+    Solved in *standardized* units (correlation matrix) so ``lam`` is
+    dimensionless and the quadratic is well conditioned (L <= d); the
+    coefficients are rescaled back to raw units at the end. Per variable i
+    (vectorized over i):
+        min_b 0.5 b^T R b - r_i^T b + lam * sum_j w_j |b_j|
+    Predecessors enter through masks so shapes stay static.
+    """
+    m, d = x.shape
+    sd = jnp.maximum(jnp.std(x, axis=0), 1e-12)
+    xc = (x - jnp.mean(x, axis=0, keepdims=True)) / sd
+    cov = (xc.T @ xc) / m  # correlation
+    mask = _pred_mask(order)  # (d, d) bool
+    # OLS weights in standardized units.
+    b_ols_raw = ols_adjacency(x, order)
+    b_ols = b_ols_raw * (sd[None, :] / sd[:, None])
+    w = 1.0 / jnp.maximum(jnp.abs(b_ols), 1e-3) ** gamma  # (d, d)
+
+    # Lipschitz bound: trace of the correlation matrix = d (cheap, safe).
+    lip = jnp.float32(d)
+
+    def fista(mask_i, cov_xi, w_i):
+        mm = mask_i[:, None] & mask_i[None, :]
+        a = jnp.where(mm, cov, 0.0)
+        g = jnp.where(mask_i, cov_xi, 0.0)
+
+        def step(carry, _):
+            b, y, t = carry
+            grad = a @ y - g
+            b_new = _soft_threshold(y - grad / lip, lam * w_i / lip)
+            b_new = jnp.where(mask_i, b_new, 0.0)
+            t_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
+            y_new = b_new + ((t - 1.0) / t_new) * (b_new - b)
+            return (b_new, y_new, t_new), None
+
+        b0 = jnp.zeros((d,), jnp.float32)
+        (b, _, _), _ = jax.lax.scan(
+            step, (b0, b0, jnp.float32(1.0)), None, length=n_steps
+        )
+        return b
+
+    b_std = jax.vmap(fista)(mask, cov, w)
+    return b_std * (sd[:, None] / sd[None, :])
+
+
+def estimate_adjacency(
+    x, order, method: str = "ols", threshold: float = 0.0, **kw
+):
+    """Adjacency matrix B with B[i, j] = direct effect of x_j on x_i."""
+    if method == "ols":
+        b = ols_adjacency(x, order)
+    elif method == "adaptive_lasso":
+        b = adaptive_lasso_adjacency(x, order, **kw)
+    else:
+        raise ValueError(f"unknown method: {method}")
+    if threshold > 0.0:
+        b = jnp.where(jnp.abs(b) >= threshold, b, 0.0)
+    return b

@@ -1,0 +1,248 @@
+"""Multi-pod sharded causal ordering (shard_map) — the scale-out extension.
+
+The paper parallelizes Algorithm 1 within one GPU. Here the same pair-
+independent structure is mapped onto a TPU pod mesh:
+
+  * samples are sharded over the ``data`` (and ``pod``) mesh axes — every
+    moment in the algorithm is a mean over samples, so shards reduce with
+    a single ``psum`` (this is the DP-style axis; scales with m),
+  * the (i, j) pair space is tiled over the ``model`` axis — each device
+    computes the moment rows for its i-tile only (TP-style axis; scales
+    with d^2),
+
+giving the hybrid sample x pair decomposition analysed in EXPERIMENTS.md
+§Perf. Collectives per ordering step:
+    psum(C)            : d^2            fp32 over data(+pod)
+    psum(M1,M2 tiles)  : 2 d^2/|model|  fp32 over data(+pod)
+    all_gather(M rows) : 2 d^2          fp32 over model
+Everything else (scores, argmax, rank-1 residual update) is replicated
+O(d^2) arithmetic.
+
+Variables are padded to a multiple of the ``model`` axis size and samples
+to a multiple of the sample-shard count; padded columns enter with
+``active=False`` so they never influence scores or updates.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core import measures
+
+EPS = 1e-12
+_NEG_INF = jnp.float32(-1e30)
+
+
+def _round_up(x: int, k: int) -> int:
+    return ((x + k - 1) // k) * k
+
+
+def _local_row_moment_sums(x_std, row_start, tile, c, chunk=512,
+                           backend="blocked", interpret=True):
+    """Moment *sums* over local samples for rows [row_start, row_start+tile).
+
+    x_std: (m_local, d) locally standardized-by-global-stats data.
+    Returns (S1, S2): (tile, d) partial sums (caller psums and divides).
+    ``blocked`` scans over sample chunks (pure jnp); ``pallas`` runs the
+    paper's kernel on the local slab (row-tile variant) — the kernel
+    composed with shard_map is the full multi-pod configuration.
+    """
+    m_local, d = x_std.shape
+    if backend == "pallas":
+        from repro.kernels.pairwise_stats import pairwise_moment_sums_rows
+
+        xt_all = x_std.T  # (d, m_local); caller guarantees padding
+        xt_rows = jax.lax.dynamic_slice_in_dim(xt_all, row_start, tile, 0)
+        c_rows = jax.lax.dynamic_slice_in_dim(c, row_start, tile, 0)
+        bi = 8 if tile % 8 == 0 else 1
+        bj = 128 if d % 128 == 0 else (8 if d % 8 == 0 else 1)
+        bm = chunk if m_local % chunk == 0 else m_local
+        return pairwise_moment_sums_rows(
+            xt_rows, xt_all, c_rows, m_total=m_local,
+            bi=bi, bj=bj, bm=bm, interpret=interpret,
+        )
+    xt = x_std.T  # (d, m_local)
+    c_rows = jax.lax.dynamic_slice_in_dim(c, row_start, tile, 0)  # (tile, d)
+    inv_std = jax.lax.rsqrt(jnp.maximum(1.0 - c_rows * c_rows, EPS))
+
+    m_pad = _round_up(m_local, chunk)
+    xt = jnp.pad(xt, ((0, 0), (0, m_pad - m_local)))
+    n_chunks = m_pad // chunk
+    # Mask the padded tail inside the nonlinearities.
+    base_valid = jnp.arange(m_pad) < m_local
+
+    def body(carry, k):
+        s1, s2 = carry
+        xs = jax.lax.dynamic_slice_in_dim(xt, k * chunk, chunk, 1)  # (d, chunk)
+        xi = jax.lax.dynamic_slice_in_dim(xs, row_start, tile, 0)   # (tile, chunk)
+        valid = jax.lax.dynamic_slice_in_dim(base_valid, k * chunk, chunk, 0)
+        r = xi[:, None, :] - c_rows[:, :, None] * xs[None, :, :]
+        u = r * inv_std[:, :, None]
+        u = jnp.where(valid[None, None, :], u, 0.0)
+        au = jnp.abs(u)
+        logcosh = au + jnp.log1p(jnp.exp(-2.0 * au)) - jnp.log(2.0)
+        logcosh = jnp.where(valid[None, None, :], logcosh, 0.0)
+        s1 = s1 + jnp.sum(logcosh, axis=-1)
+        s2 = s2 + jnp.sum(u * jnp.exp(-0.5 * u * u), axis=-1)
+        return (s1, s2), None
+
+    init = (
+        jnp.zeros((tile, d), jnp.float32),
+        jnp.zeros((tile, d), jnp.float32),
+    )
+    (s1, s2), _ = jax.lax.scan(body, init, jnp.arange(n_chunks))
+    return s1, s2
+
+
+def make_sharded_causal_order(
+    mesh,
+    m: int,
+    d: int,
+    *,
+    sample_axes=("data",),
+    pair_axis="model",
+    chunk: int = 512,
+    backend: str = "blocked",
+    interpret: bool = True,
+    fused_standardize: bool = False,
+):
+    """Build a jit-able sharded ordering fn for global data of shape (m, d).
+
+    Returns (fn, m_pad, d_pad): call ``fn(x_padded)`` with x of shape
+    (m_pad, d_pad) sharded P(sample_axes, None); returns the causal order
+    (d,) replicated.
+
+    ``fused_standardize`` (§Perf C2): skip materializing the standardized
+    slab — correlation comes from the raw-X matmul with the affine fold
+    C = D (G/m - mu mu^T) D where G = X^T X and D = diag(rstd), and the
+    moment pass standardizes on the fly inside its fused loop. Saves one
+    full HBM write+read of the X slab per ordering step. blocked backend
+    only (the Pallas path keeps the materialized slab).
+    """
+    n_sample_shards = 1
+    for ax in sample_axes:
+        n_sample_shards *= mesh.shape[ax]
+    n_pair_shards = mesh.shape[pair_axis]
+
+    m_pad = _round_up(m, n_sample_shards * chunk)
+    d_pad = _round_up(d, n_pair_shards)
+    tile = d_pad // n_pair_shards
+
+    def local_step(x_local, active):
+        """One ordering step on local shard. x_local: (m_local, d_pad)."""
+        # --- global standardization (ddof=0) via psum ---
+        s1 = jax.lax.psum(jnp.sum(x_local, axis=0), sample_axes)
+        s2 = jax.lax.psum(jnp.sum(x_local * x_local, axis=0), sample_axes)
+        mu = s1 / m
+        var = jnp.maximum(s2 / m - mu * mu, EPS)
+        rstd = jax.lax.rsqrt(var)
+        m_local = x_local.shape[0]
+        # which local rows are real samples: rows are distributed evenly;
+        # the pad tail lives on the last shards. Compute per-shard count.
+        shard_id = jnp.int32(0)
+        for ax in sample_axes:
+            shard_id = shard_id * mesh.shape[ax] + jax.lax.axis_index(ax)
+        global_start = shard_id * m_local
+        row_ids = global_start + jnp.arange(m_local)
+        valid = (row_ids < m)[:, None]
+
+        if fused_standardize:
+            # §Perf C2: raw-X matmul + affine fold (padded rows are zeros,
+            # so raw second moments are exact sums over real rows).
+            g = jax.lax.psum(x_local.T @ x_local, sample_axes) / m
+            c = (g - mu[:, None] * mu[None, :]) * (
+                rstd[:, None] * rstd[None, :]
+            )
+            # on-the-fly standardized view for the (fused) moment pass
+            x_std = jnp.where(
+                valid, (x_local - mu[None, :]) * rstd[None, :], 0.0
+            )
+        else:
+            # Padded sample rows must stay exactly zero *after* centering,
+            # so mask them instead of shifting them to -mu.
+            x_std = jnp.where(
+                valid, (x_local - mu[None, :]) * rstd[None, :], 0.0
+            )
+            # --- correlation via one matmul + psum ---
+            c = jax.lax.psum(x_std.T @ x_std, sample_axes) / m
+
+        # --- pair moments for this device's i-tile ---
+        row_start = jax.lax.axis_index(pair_axis) * tile
+        s1m, s2m = _local_row_moment_sums(
+            x_std, row_start, tile, c, chunk,
+            backend=backend, interpret=interpret,
+        )
+        s1m = jax.lax.psum(s1m, sample_axes) / m
+        s2m = jax.lax.psum(s2m, sample_axes) / m
+        m1 = jax.lax.all_gather(s1m, pair_axis, axis=0, tiled=True)  # (d_pad, d_pad)
+        m2 = jax.lax.all_gather(s2m, pair_axis, axis=0, tiled=True)
+
+        # --- scores (replicated O(d^2)) ---
+        # Column moments: padded rows are exactly zero, but log cosh(0) = 0
+        # anyway, so plain sums + /m are exact.
+        a_std = jnp.abs(x_std)
+        logcosh_col = a_std + jnp.log1p(jnp.exp(-2.0 * a_std)) - jnp.log(2.0)
+        logcosh_col = jnp.where(valid, logcosh_col, 0.0)
+        cm1 = jax.lax.psum(jnp.sum(logcosh_col, axis=0), sample_axes) / m
+        cm2 = jax.lax.psum(
+            jnp.sum(x_std * jnp.exp(-0.5 * x_std * x_std), axis=0), sample_axes
+        ) / m
+        h_col = measures.entropy_from_moments(cm1, cm2)
+        h_res = measures.entropy_from_moments(m1, m2)
+        diff = (h_col[None, :] + h_res) - (h_col[:, None] + h_res.T)
+        pair_ok = active[:, None] & active[None, :]
+        pair_ok &= ~jnp.eye(d_pad, dtype=bool)
+        contrib = jnp.where(pair_ok, jnp.minimum(0.0, diff) ** 2, 0.0)
+        k_list = jnp.where(active, -jnp.sum(contrib, axis=1), _NEG_INF)
+        root = jnp.argmax(k_list)
+
+        # --- residual update on local samples (global moments) ---
+        xr = x_local[:, root]
+        sxr = jax.lax.psum(jnp.sum(xr), sample_axes) / m
+        sxr2 = jax.lax.psum(jnp.sum(xr * xr), sample_axes) / m
+        var_r = jnp.maximum(sxr2 - sxr * sxr, EPS)
+        sxxr = jax.lax.psum(jnp.sum(x_local * xr[:, None], axis=0), sample_axes) / m
+        mu_x = s1 / m
+        cov = sxxr - mu_x * sxr
+        coef = cov / var_r
+        upd = jnp.where(
+            active & (jnp.arange(d_pad) != root), coef, 0.0
+        )
+        x_new = x_local - xr[:, None] * upd[None, :]
+        return x_new, active.at[root].set(False), root
+
+    def ordered(x_local):
+        active0 = jnp.arange(d_pad) < d
+
+        def body(carry, _):
+            xc, act = carry
+            xc, act, root = local_step(xc, act)
+            return (xc, act), root
+
+        (_, _), order = jax.lax.scan(
+            body, (x_local, active0), None, length=d
+        )
+        return order.astype(jnp.int32)
+
+    fn = shard_map(
+        ordered,
+        mesh=mesh,
+        in_specs=P(sample_axes, None),
+        out_specs=P(),
+        check_rep=False,
+    )
+    return jax.jit(fn), m_pad, d_pad
+
+
+def sharded_causal_order(x, mesh, **kw):
+    """Convenience wrapper: pads, shards, runs, returns (d,) order."""
+    m, d = x.shape
+    fn, m_pad, d_pad = make_sharded_causal_order(mesh, m, d, **kw)
+    x_pad = jnp.pad(jnp.asarray(x, jnp.float32), ((0, m_pad - m), (0, d_pad - d)))
+    order = fn(x_pad)
+    return order[:d] if d_pad != d else order

@@ -1,0 +1,77 @@
+"""VarLiNGAM (Hyvarinen et al., 2010) — autoregressive LiNGAM extension.
+
+    x(t) = sum_{tau=0..k} theta_tau x(t - tau) + e(t)
+
+Procedure (paper §3.2):
+  1. Fit a VAR(k) model by least squares -> coefficient matrices M_tau.
+  2. Run DirectLiNGAM on the VAR residuals -> instantaneous matrix B0
+     (this is where ~96% of the runtime goes, hence the same kernel).
+  3. Transform the lagged coefficients: theta_tau = (I - B0) @ M_tau.
+
+The VAR estimation is a single batched lstsq on TPU (the paper uses
+statsmodels on CPU for this step).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from .direct_lingam import DirectLiNGAM
+
+
+def estimate_var(x, lags: int = 1):
+    """Least-squares VAR(k): returns (coefs [k, d, d], intercept [d],
+    residuals [m - k, d])."""
+    x = jnp.asarray(x, dtype=jnp.float32)
+    m, d = x.shape
+    y = x[lags:]  # (m - k, d)
+    z = jnp.concatenate(
+        [x[lags - tau - 1 : m - tau - 1] for tau in range(lags)], axis=1
+    )  # (m - k, k * d), column block tau holds x(t - tau - 1)
+    z1 = jnp.concatenate([jnp.ones((y.shape[0], 1), x.dtype), z], axis=1)
+    coef, *_ = jnp.linalg.lstsq(z1, y)
+    intercept = coef[0]
+    mats = coef[1:].T.reshape(d, lags, d).transpose(1, 0, 2)  # [k, d, d]
+    resid = y - z1 @ coef
+    return mats, intercept, resid
+
+
+@dataclasses.dataclass
+class VarLiNGAM:
+    lags: int = 1
+    backend: str = "blocked"
+    interpret: bool = True
+    prune_method: str = "ols"
+    prune_threshold: float = 0.0
+
+    causal_order_: Optional[np.ndarray] = None
+    adjacency_matrices_: Optional[List[np.ndarray]] = None  # [theta_0..k]
+    var_coefs_: Optional[np.ndarray] = None
+    residuals_: Optional[np.ndarray] = None
+
+    def fit(self, x) -> "VarLiNGAM":
+        mats, _, resid = estimate_var(x, self.lags)
+        dl = DirectLiNGAM(
+            backend=self.backend,
+            interpret=self.interpret,
+            prune_method=self.prune_method,
+            prune_threshold=self.prune_threshold,
+        ).fit(resid)
+        b0 = jnp.asarray(dl.adjacency_)
+        eye = jnp.eye(b0.shape[0], dtype=b0.dtype)
+        thetas = [np.asarray(b0)] + [
+            np.asarray((eye - b0) @ mats[tau]) for tau in range(self.lags)
+        ]
+        self.causal_order_ = dl.causal_order_
+        self.adjacency_matrices_ = thetas
+        self.var_coefs_ = np.asarray(mats)
+        self.residuals_ = np.asarray(resid)
+        return self
+
+
+def fit_var_lingam(x, **kw) -> VarLiNGAM:
+    return VarLiNGAM(**kw).fit(x)

@@ -1,0 +1,7 @@
+from .ops import (  # noqa: F401
+    correlation,
+    pairwise_moments,
+    pairwise_moments_blocked,
+    standardize,
+)
+from .pairwise_stats import pairwise_moments_pallas  # noqa: F401

@@ -1,0 +1,116 @@
+"""Fused standardize + pairwise-moments Pallas kernel (§Perf C2+C3).
+
+The baseline kernel (`pairwise_stats.py`) consumes a pre-standardized,
+materialized X slab. This variant folds the standardization into the
+kernel: it streams the *raw* X tiles (optionally bf16 — C3) and applies
+the per-variable affine (mu, rstd) in VMEM before the residual/moment
+math, so the ordering step never materializes the standardized slab in
+HBM — one full slab write + read saved per ordering iteration, and the
+streamed bytes halve again with bf16 input.
+
+Correlation is NOT computed here (it comes from the raw-X MXU matmul with
+the affine fold, see core/sharded.py ``fused_standardize=True``); this
+kernel only needs C's rows for its i-tile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EPS = 1e-12
+LOG2 = 0.6931471805599453
+
+
+def _fused_kernel(x_i_ref, x_j_ref, mu_i_ref, mu_j_ref, rs_i_ref, rs_j_ref,
+                  c_ref, m1_ref, m2_ref, *, bm, m_total):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        m1_ref[...] = jnp.zeros_like(m1_ref)
+        m2_ref[...] = jnp.zeros_like(m2_ref)
+
+    # Standardize raw tiles in VMEM (affine per variable row).
+    xi = x_i_ref[...].astype(jnp.float32)  # (BI, BM) raw
+    xj = x_j_ref[...].astype(jnp.float32)  # (BJ, BM) raw
+    xi = (xi - mu_i_ref[...][:, None]) * rs_i_ref[...][:, None]
+    xj = (xj - mu_j_ref[...][:, None]) * rs_j_ref[...][:, None]
+    c = c_ref[...].astype(jnp.float32)     # (BI, BJ)
+
+    sample_ids = k * bm + jax.lax.broadcasted_iota(jnp.int32, (1, 1, bm), 2)
+    valid = sample_ids < m_total
+
+    inv_std = jax.lax.rsqrt(jnp.maximum(1.0 - c * c, EPS))
+    r = xi[:, None, :] - c[:, :, None] * xj[None, :, :]
+    u = r * inv_std[:, :, None]
+    u = jnp.where(valid, u, 0.0)
+
+    au = jnp.abs(u)
+    logcosh = au + jnp.log1p(jnp.exp(-2.0 * au)) - LOG2
+    logcosh = jnp.where(valid, logcosh, 0.0)
+    uexp = u * jnp.exp(-0.5 * u * u)
+
+    m1_ref[...] += jnp.sum(logcosh, axis=-1)
+    m2_ref[...] += jnp.sum(uexp, axis=-1)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("m_total", "bi", "bj", "bm", "interpret"),
+)
+def fused_moment_sums(
+    x_raw_rows,
+    x_raw_all,
+    mu_rows,
+    mu_all,
+    rstd_rows,
+    rstd_all,
+    c_rows,
+    *,
+    m_total: int,
+    bi: int = 8,
+    bj: int = 128,
+    bm: int = 512,
+    interpret: bool = False,
+):
+    """Moment *sums* for a row tile against all variables, from raw X.
+
+    x_raw_rows: (tile, m_pad) raw (fp32 or bf16 — §Perf C3);
+    x_raw_all:  (d_pad, m_pad); mu/rstd: per-variable standardization
+    constants; c_rows: (tile, d_pad) correlation rows.
+    Returns (S1, S2): (tile, d_pad) fp32 sums over valid samples.
+    """
+    tile, m_pad = x_raw_rows.shape
+    d_pad = x_raw_all.shape[0]
+    assert tile % bi == 0 and d_pad % bj == 0 and m_pad % bm == 0
+    grid = (tile // bi, d_pad // bj, m_pad // bm)
+    kernel = functools.partial(_fused_kernel, bm=bm, m_total=m_total)
+    out_shape = [
+        jax.ShapeDtypeStruct((tile, d_pad), jnp.float32),
+        jax.ShapeDtypeStruct((tile, d_pad), jnp.float32),
+    ]
+    in_specs = [
+        pl.BlockSpec((bi, bm), lambda i, j, k: (i, k)),   # raw rows
+        pl.BlockSpec((bj, bm), lambda i, j, k: (j, k)),   # raw all
+        pl.BlockSpec((bi,), lambda i, j, k: (i,)),        # mu rows
+        pl.BlockSpec((bj,), lambda i, j, k: (j,)),        # mu all
+        pl.BlockSpec((bi,), lambda i, j, k: (i,)),        # rstd rows
+        pl.BlockSpec((bj,), lambda i, j, k: (j,)),        # rstd all
+        pl.BlockSpec((bi, bj), lambda i, j, k: (i, j)),   # corr rows
+    ]
+    out_specs = [
+        pl.BlockSpec((bi, bj), lambda i, j, k: (i, j)),
+        pl.BlockSpec((bi, bj), lambda i, j, k: (i, j)),
+    ]
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(x_raw_rows, x_raw_all, mu_rows, mu_all, rstd_rows, rstd_all, c_rows)

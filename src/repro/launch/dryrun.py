@@ -1,0 +1,357 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+This is the proof that the distribution config is coherent without real
+hardware: ``.lower().compile()`` must succeed against the production
+meshes (16x16 single pod, 2x16x16 multi-pod) for every assigned
+architecture x input shape, plus the paper's own LiNGAM workloads.
+Outputs per-cell roofline inputs (FLOPs, bytes, collective bytes by kind,
+memory analysis) to a JSON consumed by analysis/report.py.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k --mesh pod
+  python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun.json
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from typing import Any, Dict  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.analysis import roofline  # noqa: E402
+from repro.configs.base import (  # noqa: E402
+    SHAPES,
+    get_arch,
+    list_archs,
+    supported_shapes,
+)
+from repro.dist import sharding as shd  # noqa: E402
+from repro.launch.input_specs import input_specs  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import model as model_lib  # noqa: E402
+from repro.train.optimizer import AdamW  # noqa: E402
+from repro.train.train_step import TrainState, init_state, make_train_step  # noqa: E402
+
+# Gradient-accumulation settings for the big training cells (bounds
+# activation memory; per-device microbatch stays ~1 sequence).
+TRAIN_ACCUM = {
+    "nemotron-4-340b": 4,
+    "llama-3.2-vision-90b": 4,
+    "jamba-v0.1-52b": 2,
+}
+
+# The paper's own workloads (see configs/lingam_workloads.py), run through
+# the sharded causal-ordering scan (samples over data/pod, tiles over model).
+from repro.configs.lingam_workloads import WORKLOADS  # noqa: E402
+
+LINGAM_CELLS = [(w.name, w.m, w.d) for w in WORKLOADS.values()]
+
+
+def _cost_analysis(lowered, compiled):
+    try:
+        c = compiled.cost_analysis()
+        if c:
+            return c
+    except Exception:
+        pass
+    try:
+        return lowered.cost_analysis() or {}
+    except Exception:
+        return {}
+
+
+def _memory_analysis(compiled) -> Dict[str, Any]:
+    try:
+        m = compiled.memory_analysis()
+        if m is None:
+            return {}
+        return {
+            "argument_bytes": getattr(m, "argument_size_in_bytes", None),
+            "output_bytes": getattr(m, "output_size_in_bytes", None),
+            "temp_bytes": getattr(m, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(
+                m, "generated_code_size_in_bytes", None
+            ),
+        }
+    except Exception:
+        return {}
+
+
+def _arg_bytes_per_device(shardings_tree, shape_tree, mesh) -> int:
+    """Analytic per-device argument bytes from shardings (CPU backend has no
+    memory_analysis; this is exact for inputs)."""
+    total = 0
+    flat_s = jax.tree.leaves(
+        shardings_tree, is_leaf=lambda x: isinstance(x, jax.sharding.Sharding)
+    )
+    flat_t = jax.tree.leaves(shape_tree)
+    for sh, leaf in zip(flat_s, flat_t):
+        n = leaf.dtype.itemsize
+        spec = sh.spec if hasattr(sh, "spec") else None
+        for i, d in enumerate(leaf.shape):
+            div = 1
+            if spec is not None and i < len(spec) and spec[i] is not None:
+                axes = spec[i] if isinstance(spec[i], tuple) else (spec[i],)
+                for ax in axes:
+                    div *= mesh.shape[ax]
+            n *= -(-d // div)
+        total += n
+    return total
+
+
+def lower_lm_cell(arch: str, shape_name: str, mesh, *, moe_impl="scatter",
+                  accum_override=None, loss_chunk=None, remat=None,
+                  cfg_overrides=None, seq_shard_kv=False):
+    cfg = get_arch(arch)
+    if loss_chunk is not None:
+        cfg = cfg.replace(loss_chunk=loss_chunk)
+    if remat is not None:
+        cfg = cfg.replace(remat=remat)
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+    shape = SHAPES[shape_name]
+    specs = input_specs(cfg, shape)
+
+    params_shape = jax.eval_shape(
+        lambda: model_lib.init_params(
+            cfg, jax.random.key(0), max_seq=shape.seq_len
+        )
+    )
+    p_shard = shd.param_shardings(cfg, params_shape, mesh)
+
+    if shape.kind == "train":
+        opt = AdamW(state_dtype=cfg.optimizer_dtype)
+        accum = accum_override or TRAIN_ACCUM.get(arch, 1)
+        step = make_train_step(cfg, opt, accum_steps=accum, moe_impl=moe_impl)
+        state_shape = jax.eval_shape(
+            lambda: init_state(
+                cfg, opt, jax.random.key(0), max_seq=shape.seq_len
+            )
+        )
+        state_shard = TrainState(
+            params=p_shard,
+            opt=shd.opt_shardings(cfg, state_shape.opt, mesh, params_shape),
+        )
+        b_shard = shd.batch_spec(cfg, shape, mesh)
+        fn = jax.jit(
+            step,
+            in_shardings=(state_shard, b_shard),
+            out_shardings=(state_shard, None),
+            donate_argnums=(0,),
+        )
+        lowered = fn.lower(state_shape, specs)
+        arg_bytes = _arg_bytes_per_device(
+            (state_shard, b_shard), (state_shape, specs), mesh
+        )
+    elif shape.kind == "prefill":
+        b_shard = shd.batch_spec(cfg, shape, mesh)
+        cache_shape = jax.eval_shape(
+            lambda: model_lib.init_cache(cfg, shape.global_batch, shape.seq_len)
+        )
+        d_spec = shd.decode_spec(cfg, shape, mesh, cache_shape)
+
+        def pre(params, batch):
+            return model_lib.prefill(
+                cfg, params, batch["tokens"], max_seq=shape.seq_len,
+                frontend=batch.get("frontend"), moe_impl=moe_impl,
+            )
+
+        fn = jax.jit(
+            pre,
+            in_shardings=(p_shard, b_shard),
+            out_shardings=(None, d_spec["caches"]),
+        )
+        lowered = fn.lower(params_shape, specs)
+        arg_bytes = _arg_bytes_per_device(
+            (p_shard, b_shard), (params_shape, specs), mesh
+        )
+    else:  # decode
+        d_spec = shd.decode_spec(cfg, shape, mesh, specs["caches"],
+                                 seq_shard_kv=seq_shard_kv)
+
+        def dec(params, caches, token, pos, enc_out=None):
+            return model_lib.decode_step(
+                cfg, params, token, caches, pos, enc_out=enc_out,
+                moe_impl=moe_impl,
+            )
+
+        args = [params_shape, specs["caches"], specs["token"], specs["pos"]]
+        in_sh = [p_shard, d_spec["caches"], d_spec["token"], d_spec["pos"]]
+        if "enc_out" in specs:
+            args.append(specs["enc_out"])
+            in_sh.append(d_spec["enc_out"])
+        fn = jax.jit(
+            dec,
+            in_shardings=tuple(in_sh),
+            out_shardings=(None, d_spec["caches"]),
+            donate_argnums=(1,),
+        )
+        lowered = fn.lower(*args)
+        arg_bytes = _arg_bytes_per_device(
+            tuple(in_sh), tuple(args), mesh
+        )
+
+    counts = roofline.count_params(cfg, params_shape)
+    mf = roofline.model_flops(cfg, shape, counts["total"], counts["active"])
+    return lowered, {"params": counts, "model_flops": mf,
+                     "arg_bytes_per_dev": arg_bytes}
+
+
+def lower_lingam_cell(m: int, d: int, mesh):
+    from repro.core.sharded import make_sharded_causal_order
+
+    sample_axes = ("pod", "data") if "pod" in mesh.shape else ("data",)
+    fn, m_pad, d_pad = make_sharded_causal_order(
+        mesh, m, d, sample_axes=sample_axes, chunk=512
+    )
+    x_sds = jax.ShapeDtypeStruct((m_pad, d_pad), jnp.float32)
+    with mesh:
+        lowered = fn.lower(x_sds)
+    # "model FLOPs" for LiNGAM: d ordering steps, each = the correlation
+    # matmul (2*m*d^2) + ~14 flops per (pair, sample) for residual+moments.
+    mf = float(d) * (2.0 * m * d + 14.0 * m * d) * d
+    arg_bytes = 4 * m_pad * d_pad // (
+        mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    )
+    return lowered, {
+        "params": {"total": float(d * d), "active": float(d * d)},
+        "model_flops": mf,
+        "arg_bytes_per_dev": arg_bytes,
+    }
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
+             moe_impl="scatter", **kw) -> Dict[str, Any]:
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    chips = mesh.size
+    t0 = time.time()
+    if arch.startswith(("lingam", "varlingam")):
+        m, d = next((m, d) for name, m, d in LINGAM_CELLS if name == arch)
+        lowered, aux = lower_lingam_cell(m, d, mesh)
+    else:
+        with mesh:
+            lowered, aux = lower_lm_cell(
+                arch, shape_name, mesh, moe_impl=moe_impl, **kw
+            )
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    cost = _cost_analysis(lowered, compiled)
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    coll = roofline.collective_bytes(compiled.as_text())
+    coll_total = float(sum(coll.values()))
+    terms = roofline.roofline_terms(flops_dev, bytes_dev, coll_total)
+    mem = _memory_analysis(compiled)
+
+    out = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_kind,
+        "chips": chips,
+        "flops_per_dev": flops_dev,
+        "bytes_per_dev": bytes_dev,
+        "collective_bytes_per_dev": coll,
+        "collective_total_per_dev": coll_total,
+        "terms": terms,
+        "model_flops": aux["model_flops"],
+        "model_flops_per_dev": aux["model_flops"] / chips,
+        "useful_flops_ratio": (
+            aux["model_flops"] / chips / flops_dev if flops_dev else None
+        ),
+        "params_total": aux["params"]["total"],
+        "params_active": aux["params"]["active"],
+        "arg_bytes_per_dev": aux["arg_bytes_per_dev"],
+        "memory_analysis": mem,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "moe_impl": moe_impl,
+    }
+    print(
+        f"[dryrun] {arch:24s} {shape_name:12s} {mesh_kind:8s} "
+        f"compile={t_compile:6.1f}s flops/dev={flops_dev:.3e} "
+        f"bytes/dev={bytes_dev:.3e} coll/dev={coll_total:.3e} "
+        f"dominant={terms['dominant']}"
+    )
+    return out
+
+
+def all_cells():
+    cells = []
+    for arch in list_archs():
+        cfg = get_arch(arch)
+        for shape_name in supported_shapes(cfg):
+            cells.append((arch, shape_name))
+    for name, _, _ in LINGAM_CELLS:
+        cells.append((name, "ordering"))
+    return cells
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--mesh", choices=["pod", "multipod", "both"], default="pod")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--moe-impl", default="scatter")
+    ap.add_argument("--out", type=str, default=None)
+    ap.add_argument("--append", action="store_true")
+    args = ap.parse_args()
+
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        cells = all_cells()
+    else:
+        assert args.arch, "--arch required without --all"
+        shapes = [args.shape] if args.shape else [
+            s for s in (supported_shapes(get_arch(args.arch))
+                        if not args.arch.startswith(("lingam", "varlingam"))
+                        else ["ordering"])
+        ]
+        cells = [(args.arch, s) for s in shapes]
+
+    results = []
+    if args.out and args.append and os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    done = {(r["arch"], r["shape"], r["mesh"], r.get("moe_impl", "scatter"))
+            for r in results}
+    failures = []
+    for arch, shape_name in cells:
+        for mesh_kind in meshes:
+            key = (arch, shape_name, mesh_kind, args.moe_impl)
+            if key in done:
+                continue
+            try:
+                results.append(
+                    run_cell(arch, shape_name, mesh_kind,
+                             moe_impl=args.moe_impl)
+                )
+            except Exception as e:  # noqa: BLE001
+                traceback.print_exc()
+                failures.append((arch, shape_name, mesh_kind, str(e)))
+            if args.out:
+                os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+    print(f"[dryrun] {len(results)} cells ok, {len(failures)} failed")
+    for f_ in failures:
+        print("  FAILED:", f_)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run contract.
+
+``input_specs(cfg, shape)`` returns a dict matching exactly what
+``train_step`` / ``prefill`` / ``decode_step`` consume, with no device
+allocation. ``make_host_batch`` materializes the same shapes with real
+numbers for smoke tests and the example drivers (frontend stubs included:
+audio frames / vision patch embeddings arrive as precomputed embeddings).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import model as model_lib
+
+
+def _frontend_shape(cfg: ArchConfig, batch: int):
+    return (batch, cfg.n_frontend_tokens, cfg.d_model)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    f32 = jnp.float32
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        spec = {
+            "tokens": sds((b, s), i32),
+            "labels": sds((b, s), i32),
+        }
+        if cfg.family in ("audio", "vlm"):
+            spec["frontend"] = sds(_frontend_shape(cfg, b), f32)
+        return spec
+    if shape.kind == "prefill":
+        spec = {"tokens": sds((b, s), i32)}
+        if cfg.family in ("audio", "vlm"):
+            spec["frontend"] = sds(_frontend_shape(cfg, b), f32)
+        return spec
+    if shape.kind == "decode":
+        # eval_shape: NO allocation (a 32k x 128 cache is tens of GB)
+        cache_spec = jax.eval_shape(
+            lambda: model_lib.init_cache(cfg, b, s)
+        )
+        spec = {
+            "token": sds((b, 1), i32),
+            "caches": cache_spec,
+            "pos": sds((), i32),
+        }
+        if cfg.family in ("audio", "vlm"):
+            spec["enc_out"] = sds(_frontend_shape(cfg, b), f32)
+        return spec
+    raise ValueError(shape.kind)
+
+
+def make_host_batch(cfg: ArchConfig, shape: ShapeConfig, seed: int = 0):
+    """Materialize input_specs with real host data (for smoke/examples)."""
+    rng = np.random.default_rng(seed)
+    spec = input_specs(cfg, shape)
+
+    def fill(s):
+        if s.dtype == jnp.int32:
+            if s.shape == ():
+                return jnp.int32(min(16, shape.seq_len - 1))
+            return jnp.asarray(
+                rng.integers(0, cfg.vocab_size, size=s.shape), jnp.int32
+            )
+        return jnp.asarray(rng.normal(size=s.shape) * 0.02, s.dtype)
+
+    return jax.tree.map(fill, spec)

@@ -1,0 +1,278 @@
+"""Transformer building blocks: norms, RoPE, GQA attention (+cross-attn),
+MLP variants. Pure-functional: params are plain dict pytrees; every layer
+has an ``init_*`` (allocating) and an ``apply``-style function.
+
+Conventions:
+  activations  (B, S, D) in cfg.compute_dtype (bf16 by default)
+  params       fp32 (cast to compute dtype at use — mixed precision)
+  attention weights  wq (D, H, hd) / wk,wv (D, KV, hd) / wo (H, hd, D)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+def cdtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def _init(key, shape, scale=None):
+    fan_in = shape[0] if len(shape) > 1 else 1
+    scale = scale if scale is not None else 1.0 / max(fan_in, 1) ** 0.5
+    return jax.random.normal(key, shape, dtype=jnp.float32) * scale
+
+
+# ---------------------------------------------------------------- norms
+def init_norm(cfg: ArchConfig, d: int):
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((d,), jnp.float32),
+                "bias": jnp.zeros((d,), jnp.float32)}
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def apply_norm(cfg: ArchConfig, p, x):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"] + p["bias"]
+    else:  # rmsnorm
+        ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + cfg.norm_eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+def _rms_head(x, scale, eps):
+    """Per-head-dim RMS norm for qk_norm (fp32 accumulate)."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale).astype(x.dtype)
+
+
+# ---------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float):
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+
+
+def apply_rope(x, positions, theta):
+    """x: (B, S, H, hd); positions: (S,) or (B, S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    if positions.ndim == 1:
+        ang = positions[:, None].astype(jnp.float32) * freqs[None, :]  # (S, hd/2)
+        ang = ang[None, :, None, :]  # (1, S, 1, hd/2)
+    else:
+        ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, hd/2)
+        ang = ang[:, :, None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- attention
+def init_attention(cfg: ArchConfig, key, cross: bool = False):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _init(ks[0], (d, h, hd)),
+        "wk": _init(ks[1], (d, kv, hd)),
+        "wv": _init(ks[2], (d, kv, hd)),
+        "wo": _init(ks[3], (h, hd, d), scale=1.0 / (h * hd) ** 0.5),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), jnp.float32)
+        p["bk"] = jnp.zeros((kv, hd), jnp.float32)
+        p["bv"] = jnp.zeros((kv, hd), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def _project_qkv(cfg, p, x, kv_x):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", kv_x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", kv_x, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    if cfg.qk_norm:
+        q = _rms_head(q, p["q_norm"], cfg.norm_eps)
+        k = _rms_head(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def _sdpa(cfg, q, k, v, causal: bool, q_offset=0):
+    """q: (B, Sq, H, hd); k,v: (B, Sk, KV, hd). GQA via head grouping.
+    Softmax in fp32. Returns (B, Sq, H, hd)."""
+    b, sq, h, hd = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    group = h // max(kv, 1)
+    qg = q.reshape(b, sq, kv, group, hd)
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", qg, k).astype(jnp.float32) * scale
+    if cfg.attn_logit_softcap > 0:
+        c = cfg.attn_logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    if causal:
+        qpos = q_offset + jnp.arange(sq)
+        mask = qpos[:, None] >= jnp.arange(sk)[None, :]
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w, v)
+    return out.reshape(b, sq, h, hd)
+
+
+def _sdpa_chunked(cfg, q, k, v, causal: bool, q_offset=0, chunk: int = 1024):
+    """Flash-style attention: scan over KV chunks with running max/sum —
+    never materializes the (Sq, Sk) score matrix in HBM. Numerically equal
+    to _sdpa (fp32 softmax accumulation). Used when cfg.attn_impl ==
+    'chunked'; the §Perf memory-term optimization for prefill_32k."""
+    b, sq, h, hd = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    if sk % chunk != 0:
+        return _sdpa(cfg, q, k, v, causal, q_offset)
+    group = h // max(kv, 1)
+    qg = q.reshape(b, sq, kv, group, hd)
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    nchunks = sk // chunk
+    kc = k.reshape(b, nchunks, chunk, kv, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nchunks, chunk, kv, hd).transpose(1, 0, 2, 3, 4)
+    qpos = q_offset + jnp.arange(sq)
+
+    def body(carry, inp):
+        m_run, l_run, acc = carry
+        kci, vci, idx = inp
+        logits = (
+            jnp.einsum("bqkgh,bskh->bkgqs", qg, kci).astype(jnp.float32)
+            * scale
+        )
+        if cfg.attn_logit_softcap > 0:
+            c = cfg.attn_logit_softcap
+            logits = c * jnp.tanh(logits / c)
+        if causal:
+            kpos = idx * chunk + jnp.arange(chunk)
+            mask = qpos[:, None] >= kpos[None, :]
+            logits = jnp.where(mask[None, None, None], logits, -1e30)
+        m_new = jnp.maximum(m_run, jnp.max(logits, axis=-1))
+        alpha = jnp.exp(m_run - m_new)
+        p_ = jnp.exp(logits - m_new[..., None])
+        l_new = l_run * alpha + jnp.sum(p_, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bkgqs,bskh->bkgqh", p_.astype(q.dtype), vci
+        ).astype(jnp.float32)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, kv, group, sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, kv, group, sq), jnp.float32)
+    acc0 = jnp.zeros((b, kv, group, sq, hd), jnp.float32)
+    (m_f, l_f, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0), (kc, vc, jnp.arange(nchunks))
+    )
+    out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def attention(cfg, p, x, *, positions, causal=True, kv_x=None,
+              cache=None, cache_pos=None):
+    """Self- or cross-attention.
+
+    cache: optional dict {k: (B, S_max, KV, hd), v: ...}. For decode, the
+    new k/v are written at ``cache_pos`` and attention runs over the full
+    cache buffer (positions >= written length are masked by causality).
+    Returns (out, new_cache).
+    """
+    kv_src = x if kv_x is None else kv_x
+    q, k, v = _project_qkv(cfg, p, x, kv_src)
+    use_rope = cfg.rope_theta > 0 and kv_x is None
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    sdpa = (
+        (lambda *a, **kw: _sdpa_chunked(*a, **kw, chunk=cfg.attn_chunk))
+        if cfg.attn_impl == "chunked"
+        else _sdpa
+    )
+    new_cache = None
+    if cache is not None:
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, cache_pos, 1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, cache_pos, 1)
+        new_cache = {"k": ck, "v": cv}
+        k, v = ck, cv
+        out = sdpa(cfg, q, k, v, causal, q_offset=cache_pos)
+    else:
+        out = sdpa(cfg, q, k, v, causal)
+    dt = x.dtype
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+    return out, new_cache
+
+
+# ---------------------------------------------------------------- MLPs
+def init_mlp(cfg: ArchConfig, key, d_ff: Optional[int] = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.mlp == "swiglu":
+        return {
+            "w_gate": _init(ks[0], (d, f)),
+            "w_up": _init(ks[1], (d, f)),
+            "w_down": _init(ks[2], (f, d)),
+        }
+    return {  # squared_relu | gelu: single up projection
+        "w_up": _init(ks[0], (d, f)),
+        "w_down": _init(ks[1], (f, d)),
+    }
+
+
+def apply_mlp(cfg: ArchConfig, p, x):
+    dt = x.dtype
+    if cfg.mlp == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(dt))
+        u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(dt))
+        h = jax.nn.silu(g) * u
+    else:
+        u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(dt))
+        if cfg.mlp == "squared_relu":
+            h = jnp.square(jax.nn.relu(u))
+        else:
+            h = jax.nn.gelu(u)
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(dt))
+
+
+# ---------------------------------------------------------------- embeddings
+def init_embedding(cfg: ArchConfig, key):
+    return {"table": _init(key, (cfg.vocab_padded, cfg.d_model), scale=0.02)}
+
+
+def embed(cfg, p, tokens):
+    return p["table"].astype(cdtype(cfg))[tokens]
+
+
+def init_lm_head(cfg: ArchConfig, key):
+    if cfg.tie_embeddings:
+        return {}
+    return {"w": _init(key, (cfg.d_model, cfg.vocab_padded))}
+
+
+def lm_logits(cfg, head_p, embed_p, x):
+    dt = x.dtype
+    if cfg.tie_embeddings:
+        w = embed_p["table"].astype(dt).T
+    else:
+        w = head_p["w"].astype(dt)
+    return jnp.einsum("bsd,dv->bsv", x, w)
+
+
+def init_pos_embedding(cfg: ArchConfig, key, max_len: int):
+    """Learned absolute positions (whisper-style, used when rope_theta==0)."""
+    return {"pos": _init(key, (max_len, cfg.d_model), scale=0.02)}

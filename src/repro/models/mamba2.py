@@ -1,0 +1,240 @@
+"""Mamba2 block — SSD (state-space duality) chunked algorithm + O(1) decode.
+
+Implements the selective state-space layer of Mamba2 (Dao & Gu, 2024):
+
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * (B_t (x) x_t)
+    y_t = C_t . h_t + D * x_t
+
+Training/prefill uses the chunked SSD form: within a chunk of Q tokens the
+quadratic "attention-like" term runs on the MXU; across chunks a linear
+recurrence carries the (H, P, N) state. Decode is the single-step
+recurrence with a rolling depthwise-conv state.
+
+Shapes: x (B, L, D_inner) viewed as (B, L, H, P) heads; B/C (B, L, G, N)
+broadcast over the H//G heads of each group; A is a per-head scalar.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers
+
+
+def conv_dim(cfg: ArchConfig) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+
+
+def init_mamba(cfg: ArchConfig, key):
+    d = cfg.d_model
+    di = cfg.d_inner
+    h = cfg.ssm_heads
+    gdim = cfg.ssm_groups * cfg.ssm_state
+    cdim = conv_dim(cfg)
+    ks = jax.random.split(key, 6)
+    d_in_proj = 2 * di + 2 * gdim + h
+    return {
+        "in_proj": layers._init(ks[0], (d, d_in_proj)),
+        "conv_w": layers._init(ks[1], (cfg.ssm_conv, cdim), scale=0.5),
+        "conv_b": jnp.zeros((cdim,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "a_log": jnp.log(
+            jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)
+        ),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm_scale": jnp.ones((di,), jnp.float32),
+        "out_proj": layers._init(ks[2], (di, d)),
+    }
+
+
+def _segsum(a):
+    """(..., Q) -> (..., Q, Q) lower-triangular segment sums:
+    out[l, s] = sum_{t=s+1..l} a[t], -inf above the diagonal."""
+    q = a.shape[-1]
+    t = jnp.cumsum(a, axis=-1)
+    seg = t[..., :, None] - t[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(xh, dt, a, b_in, c_in, chunk, initial_state=None):
+    """Chunked SSD scan.
+
+    xh: (B, L, H, P); dt: (B, L, H) (post-softplus); a: (H,) negative;
+    b_in/c_in: (B, L, G, N). Returns (y (B,L,H,P), final_state (B,H,P,N)).
+    """
+    bsz, l, h, p = xh.shape
+    g, n = b_in.shape[2], b_in.shape[3]
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+    hg = h // g
+
+    # Broadcast groups over heads and scale x by dt (fp32 decay math).
+    bh = jnp.repeat(b_in, hg, axis=2)  # (B, L, H, N)
+    ch = jnp.repeat(c_in, hg, axis=2)
+    dta = (dt * a[None, None, :]).astype(jnp.float32)  # (B, L, H), negative
+    xbar = xh * dt[..., None].astype(xh.dtype)
+
+    def tochunks(t):  # (B, L, ...) -> (B, nc, Q, ...)
+        return t.reshape(bsz, nc, chunk, *t.shape[2:])
+
+    xc, bc, cc = tochunks(xbar), tochunks(bh), tochunks(ch)
+    dtac = tochunks(dta).transpose(0, 3, 1, 2)  # (B, H, nc, Q)
+    a_cum = jnp.cumsum(dtac, axis=-1)  # (B, H, nc, Q)
+
+    # Intra-chunk (quadratic, MXU): Y_diag = (C B^T o L) X
+    lmat = jnp.exp(_segsum(dtac)).astype(xh.dtype)  # (B,H,nc,Q,Q)
+    y_diag = jnp.einsum(
+        "bclhn,bcshn,bhcls,bcshp->bclhp", cc, bc, lmat, xc
+    )
+
+    # Chunk states: B^T X weighted by remaining decay within the chunk.
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum).astype(xh.dtype)  # (B,H,nc,Q)
+    states = jnp.einsum("bclhn,bhcl,bclhp->bchpn", bc, decay_states, xc)
+
+    # Inter-chunk recurrence over nc chunks.
+    chunk_decay = jnp.exp(a_cum[..., -1])  # (B, H, nc)
+    if initial_state is None:
+        init = jnp.zeros((bsz, h, p, n), xh.dtype)
+    else:
+        init = initial_state.astype(xh.dtype)
+
+    def scan_fn(carry, inp):
+        st, dec = inp  # st: (B,H,P,N), dec: (B,H)
+        new = carry * dec[..., None, None].astype(xh.dtype) + st
+        return new, carry  # emit the state *entering* this chunk
+
+    (final_state, prev_states) = jax.lax.scan(
+        scan_fn,
+        init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(2, 0, 1)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (B,nc,H,P,N)
+
+    # Inter-chunk output: C_t . (decayed incoming state)
+    state_decay = jnp.exp(a_cum).astype(xh.dtype)  # (B,H,nc,Q)
+    y_off = jnp.einsum(
+        "bclhn,bchpn,bhcl->bclhp", cc, prev_states, state_decay
+    )
+    y = (y_diag + y_off).reshape(bsz, l, h, p)
+    return y, final_state
+
+
+def _split_xbc(cfg, xbc):
+    di = cfg.d_inner
+    gdim = cfg.ssm_groups * cfg.ssm_state
+    x = xbc[..., :di]
+    b = xbc[..., di : di + gdim]
+    c = xbc[..., di + gdim :]
+    return x, b, c
+
+
+def _causal_conv(cfg, p, xbc):
+    """Depthwise causal conv over (B, L, C_dim) + SiLU."""
+    k = cfg.ssm_conv
+    w = p["conv_w"].astype(xbc.dtype)  # (k, cdim)
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + xbc.shape[1], :] * w[i][None, None, :]
+        for i in range(k)
+    )
+    return jax.nn.silu(out + p["conv_b"].astype(xbc.dtype))
+
+
+def _gated_out(cfg, p, y, z):
+    """RMSNorm(y * silu(z)) then out-projection."""
+    dt = y.dtype
+    gated = y * jax.nn.silu(z)
+    gf = gated.astype(jnp.float32)
+    ms = jnp.mean(gf * gf, axis=-1, keepdims=True)
+    normed = (gf * jax.lax.rsqrt(ms + cfg.norm_eps) * p["norm_scale"]).astype(dt)
+    return jnp.einsum("bld,de->ble", normed, p["out_proj"].astype(dt))
+
+
+def apply_mamba(cfg: ArchConfig, p, x, *, return_cache: bool = False):
+    """Full-sequence forward. x: (B, L, D). Returns (out, cache | None)."""
+    bsz, l, _ = x.shape
+    h = cfg.ssm_heads
+    dt_type = x.dtype
+    proj = jnp.einsum("bld,de->ble", x, p["in_proj"].astype(dt_type))
+    z = proj[..., : cfg.d_inner]
+    xbc = proj[..., cfg.d_inner : -h]
+    dt_raw = proj[..., -h:]
+
+    xbc_conv = _causal_conv(cfg, p, xbc)
+    xin, b_in, c_in = _split_xbc(cfg, xbc_conv)
+    xh = xin.reshape(bsz, l, h, cfg.ssm_headdim)
+    b_in = b_in.reshape(bsz, l, cfg.ssm_groups, cfg.ssm_state)
+    c_in = c_in.reshape(bsz, l, cfg.ssm_groups, cfg.ssm_state)
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + p["dt_bias"][None, None, :]
+    )
+    a = -jnp.exp(p["a_log"])  # (H,)
+
+    # Pad L up to a chunk multiple if needed (zeros don't affect the scan:
+    # dt=softplus(bias) > 0 but x=0 contributes nothing; outputs sliced off).
+    q = cfg.ssm_chunk
+    l_pad = (q - l % q) % q
+    if l_pad:
+        xh = jnp.pad(xh, ((0, 0), (0, l_pad), (0, 0), (0, 0)))
+        b_in = jnp.pad(b_in, ((0, 0), (0, l_pad), (0, 0), (0, 0)))
+        c_in = jnp.pad(c_in, ((0, 0), (0, l_pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, l_pad), (0, 0)))
+
+    y, final_state = ssd_chunked(xh, dt, a, b_in, c_in, q)
+    y = y[:, :l]
+    y = y + p["d_skip"].astype(y.dtype)[None, None, :, None] * xh[:, :l]
+    y = y.reshape(bsz, l, cfg.d_inner)
+    out = _gated_out(cfg, p, y, z)
+
+    cache = None
+    if return_cache:
+        k = cfg.ssm_conv
+        tail = xbc[:, -(k - 1) :, :] if l >= k - 1 else jnp.pad(
+            xbc, ((0, 0), (k - 1 - l, 0), (0, 0))
+        )
+        cache = {"conv": tail, "ssm": final_state}
+    return out, cache
+
+
+def apply_mamba_decode(cfg: ArchConfig, p, x, cache):
+    """Single-token decode. x: (B, 1, D); cache: {conv (B,k-1,cdim),
+    ssm (B,H,P,N)}. Returns (out (B,1,D), new_cache)."""
+    bsz = x.shape[0]
+    h = cfg.ssm_heads
+    dtp = x.dtype
+    proj = jnp.einsum("bld,de->ble", x, p["in_proj"].astype(dtp))
+    z = proj[..., : cfg.d_inner]
+    xbc = proj[..., cfg.d_inner : -h]  # (B, 1, cdim)
+    dt_raw = proj[..., -h:]
+
+    # rolling conv state
+    window = jnp.concatenate([cache["conv"], xbc], axis=1)  # (B, k, cdim)
+    w = p["conv_w"].astype(dtp)
+    conv_out = jnp.einsum("bkc,kc->bc", window, w) + p["conv_b"].astype(dtp)
+    xbc_t = jax.nn.silu(conv_out)[:, None, :]
+    new_conv = window[:, 1:, :]
+
+    xin, b_in, c_in = _split_xbc(cfg, xbc_t)
+    xh = xin.reshape(bsz, h, cfg.ssm_headdim)
+    b_in = b_in.reshape(bsz, cfg.ssm_groups, cfg.ssm_state)
+    c_in = c_in.reshape(bsz, cfg.ssm_groups, cfg.ssm_state)
+    hg = h // cfg.ssm_groups
+    bh = jnp.repeat(b_in, hg, axis=1)  # (B, H, N)
+    ch = jnp.repeat(c_in, hg, axis=1)
+    dt = jax.nn.softplus(
+        dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"][None, :]
+    )  # (B, H)
+    a = -jnp.exp(p["a_log"])
+    da = jnp.exp(dt * a[None, :]).astype(dtp)  # (B, H)
+
+    state = cache["ssm"]
+    inc = jnp.einsum("bhp,bhn->bhpn", xh * dt[..., None].astype(dtp), bh)
+    new_state = state * da[..., None, None] + inc
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, ch)
+    y = y + p["d_skip"].astype(dtp)[None, :, None] * xh
+    y = y.reshape(bsz, 1, cfg.d_inner)
+    out = _gated_out(cfg, p, y, z)
+    return out, {"conv": new_conv, "ssm": new_state}

@@ -1,0 +1,395 @@
+"""Model assembly for all assigned architecture families.
+
+Every architecture is expressed as ``n_groups`` repetitions of a layer
+*pattern* (period = 1 for uniform stacks, 5 for the vision cross-attn
+interleave, 8 for jamba's 1:7 mamba:attn hybrid). Parameters of each
+pattern position are stacked over groups and the group loop is a
+``lax.scan`` — HLO size stays O(pattern), not O(n_layers), which keeps
+512-device dry-run compiles tractable even for the 96-layer 340B config.
+
+Public entry points:
+  init_params(cfg, key, max_seq)          -> param pytree (allocating)
+  forward(cfg, params, tokens, ...)       -> (logits, aux)   [train path]
+  prefill(cfg, params, tokens, ...)       -> (last_logits, cache)
+  decode_step(cfg, params, token, cache, pos) -> (logits, new_cache)
+  lm_loss(cfg, params, batch)             -> scalar loss
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers, mamba2, moe
+
+
+# ---------------------------------------------------------------- pattern
+@dataclasses.dataclass(frozen=True)
+class LayerDesc:
+    mixer: str  # "attn" | "mamba"
+    cross: bool = False
+    ffn: Optional[str] = None  # "mlp" | "moe" | None
+
+
+def layer_pattern(cfg: ArchConfig) -> List[LayerDesc]:
+    """The repeating layer pattern for this architecture."""
+    fam = cfg.family
+    if fam in ("dense",):
+        return [LayerDesc("attn", ffn="mlp")]
+    if fam == "moe":
+        return [LayerDesc("attn", ffn="moe")]
+    if fam == "ssm":
+        return [LayerDesc("mamba", ffn=None)]
+    if fam == "vlm":
+        period = cfg.cross_attn_every
+        descs = [LayerDesc("attn", ffn="mlp") for _ in range(period)]
+        descs[period - 1] = LayerDesc("attn", cross=True, ffn="mlp")
+        return descs
+    if fam == "hybrid":
+        period = cfg.attn_every
+        descs = []
+        for i in range(period):
+            mixer = "attn" if i == period // 2 else "mamba"
+            ffn = "moe" if i % cfg.moe_every == cfg.moe_offset else "mlp"
+            descs.append(LayerDesc(mixer, ffn=ffn))
+        return descs
+    if fam == "audio":  # decoder pattern; encoder handled separately
+        return [LayerDesc("attn", cross=True, ffn="mlp")]
+    raise ValueError(fam)
+
+
+def n_groups(cfg: ArchConfig) -> int:
+    period = len(layer_pattern(cfg))
+    assert cfg.n_layers % period == 0, (cfg.name, cfg.n_layers, period)
+    return cfg.n_layers // period
+
+
+# ---------------------------------------------------------------- init
+def _init_layer(cfg: ArchConfig, key, desc: LayerDesc) -> Dict[str, Any]:
+    ks = jax.random.split(key, 6)
+    p: Dict[str, Any] = {"ln1": layers.init_norm(cfg, cfg.d_model)}
+    if desc.mixer == "attn":
+        p["attn"] = layers.init_attention(cfg, ks[0])
+    else:
+        p["mamba"] = mamba2.init_mamba(cfg, ks[0])
+    if desc.cross:
+        p["ln_x"] = layers.init_norm(cfg, cfg.d_model)
+        p["xattn"] = layers.init_attention(cfg, ks[1], cross=True)
+    if desc.ffn == "mlp":
+        p["ln2"] = layers.init_norm(cfg, cfg.d_model)
+        p["mlp"] = layers.init_mlp(cfg, ks[2])
+    elif desc.ffn == "moe":
+        p["ln2"] = layers.init_norm(cfg, cfg.d_model)
+        p["moe"] = moe.init_moe(cfg, ks[2])
+    return p
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_params(cfg: ArchConfig, key, max_seq: int = 0) -> Dict[str, Any]:
+    pattern = layer_pattern(cfg)
+    ng = n_groups(cfg)
+    keys = jax.random.split(key, 8)
+    params: Dict[str, Any] = {
+        "embed": layers.init_embedding(cfg, keys[0]),
+        "ln_f": layers.init_norm(cfg, cfg.d_model),
+        "head": layers.init_lm_head(cfg, keys[1]),
+    }
+    gkeys = jax.random.split(keys[2], ng * len(pattern)).reshape(
+        ng, len(pattern)
+    )
+    groups = []
+    for pos, desc in enumerate(pattern):
+        groups.append(
+            _stack([_init_layer(cfg, gkeys[g, pos], desc) for g in range(ng)])
+        )
+    params["groups"] = groups
+
+    if cfg.rope_theta == 0.0 and max_seq > 0:
+        params["pos_embed"] = layers.init_pos_embedding(cfg, keys[3], max_seq)
+
+    if cfg.encoder_layers > 0:  # whisper encoder (frontend embeddings stub)
+        enc_cfg = cfg
+        ekeys = jax.random.split(keys[4], cfg.encoder_layers)
+        enc_layers = [
+            _init_layer(enc_cfg, ekeys[i], LayerDesc("attn", ffn="mlp"))
+            for i in range(cfg.encoder_layers)
+        ]
+        params["encoder"] = {
+            "layers": _stack(enc_layers),
+            "ln_f": layers.init_norm(cfg, cfg.d_model),
+            "pos": layers.init_pos_embedding(cfg, keys[5], cfg.n_frontend_tokens)[
+                "pos"
+            ],
+        }
+    return params
+
+
+# ---------------------------------------------------------------- encoder
+def _run_encoder(cfg: ArchConfig, params, frames):
+    """frames: (B, T, D) stub embeddings -> (B, T, D) encoder output."""
+    enc = params["encoder"]
+    x = frames.astype(layers.cdtype(cfg))
+    x = x + enc["pos"].astype(x.dtype)[None, : x.shape[1], :]
+    positions = jnp.arange(x.shape[1])
+
+    def body(carry, lp):
+        h = carry
+        a, _ = layers.attention(
+            cfg, lp["attn"], layers.apply_norm(cfg, lp["ln1"], h),
+            positions=positions, causal=False,
+        )
+        h = h + a
+        h = h + layers.apply_mlp(
+            cfg, lp["mlp"], layers.apply_norm(cfg, lp["ln2"], h)
+        )
+        return h, None
+
+    x, _ = jax.lax.scan(body, x, enc["layers"])
+    return layers.apply_norm(cfg, enc["ln_f"], x)
+
+
+# ---------------------------------------------------------------- core stack
+def _layer_apply(cfg, desc: LayerDesc, lp, x, *, positions, enc_out,
+                 cache, cache_pos, moe_impl):
+    """One pattern-position layer. Returns (x, new_cache, aux)."""
+    aux = jnp.float32(0.0)
+    new_cache: Dict[str, Any] = {}
+    h = layers.apply_norm(cfg, lp["ln1"], x)
+    if desc.mixer == "attn":
+        c = cache.get("attn") if cache else None
+        a, nc = layers.attention(
+            cfg, lp["attn"], h, positions=positions, causal=True,
+            cache=c, cache_pos=cache_pos,
+        )
+        if nc is not None:
+            new_cache["attn"] = nc
+        x = x + a
+    else:
+        if cache is not None and "mamba" in cache and h.shape[1] == 1:
+            # decode: single-step recurrence against the carried state
+            a, nc = mamba2.apply_mamba_decode(cfg, lp["mamba"], h, cache["mamba"])
+            new_cache["mamba"] = nc
+        else:
+            # train (cache=None) or prefill (fresh state, emit cache)
+            want_cache = cache is not None
+            a, nc = mamba2.apply_mamba(cfg, lp["mamba"], h, return_cache=want_cache)
+            if want_cache:
+                new_cache["mamba"] = nc
+        x = x + a
+    if desc.cross:
+        hx = layers.apply_norm(cfg, lp["ln_x"], x)
+        a, _ = layers.attention(
+            cfg, lp["xattn"], hx, positions=positions, causal=False,
+            kv_x=enc_out,
+        )
+        x = x + a
+    if desc.ffn == "mlp":
+        h2 = layers.apply_norm(cfg, lp["ln2"], x)
+        x = x + layers.apply_mlp(cfg, lp["mlp"], h2)
+    elif desc.ffn == "moe":
+        h2 = layers.apply_norm(cfg, lp["ln2"], x)
+        mo, a_loss = moe.apply_moe(cfg, lp["moe"], h2, impl=moe_impl)
+        x = x + mo
+        aux = aux + a_loss
+    return x, new_cache, aux
+
+
+def _run_stack(cfg: ArchConfig, params, x, *, positions, enc_out=None,
+               caches=None, cache_pos=None, moe_impl="scatter"):
+    """Scan the group stack. caches: None (train) or list per pattern pos of
+    stacked-over-group cache pytrees. Returns (x, new_caches, aux_sum)."""
+    pattern = layer_pattern(cfg)
+
+    def group_body(carry, xs):
+        h, aux = carry
+        new_caches_g = []
+        for pos, desc in enumerate(pattern):
+            lp = xs[pos]
+            c_g = xs[len(pattern) + pos] if caches is not None else None
+            h, nc, a = _layer_apply(
+                cfg, desc, lp, h, positions=positions, enc_out=enc_out,
+                cache=c_g, cache_pos=cache_pos, moe_impl=moe_impl,
+            )
+            aux = aux + a
+            new_caches_g.append(nc)
+        return (h, aux), tuple(new_caches_g)
+
+    body = group_body
+    if cfg.remat:
+        # "full": recompute everything (min memory, 2x fwd FLOPs);
+        # "dots": save matmul outputs, recompute only elementwise/norms
+        # (§Perf E — near-1x FLOPs at moderate activation memory).
+        policy = (
+            jax.checkpoint_policies.nothing_saveable
+            if cfg.remat_policy == "full"
+            else jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+        body = jax.checkpoint(group_body, policy=policy)
+
+    xs = tuple(params["groups"])
+    if caches is not None:
+        xs = xs + tuple(caches)
+    (x, aux), new_caches = jax.lax.scan(body, (x, jnp.float32(0.0)), xs)
+    return x, (list(new_caches) if caches is not None else None), aux
+
+
+# ---------------------------------------------------------------- train fwd
+def forward(cfg: ArchConfig, params, tokens, *, frontend=None,
+            moe_impl="scatter"):
+    """Training forward. tokens: (B, S) int32; frontend: (B, T, D) stub
+    embeddings for audio/vlm. Returns (logits (B,S,V), aux)."""
+    x = layers.embed(cfg, params["embed"], tokens)
+    b, s = tokens.shape
+    positions = jnp.arange(s)
+    if cfg.rope_theta == 0.0 and "pos_embed" in params:
+        x = x + params["pos_embed"]["pos"].astype(x.dtype)[None, :s, :]
+    enc_out = None
+    if cfg.family == "audio":
+        enc_out = _run_encoder(cfg, params, frontend)
+    elif cfg.family == "vlm":
+        enc_out = frontend.astype(x.dtype)
+    x, _, aux = _run_stack(
+        cfg, params, x, positions=positions, enc_out=enc_out,
+        moe_impl=moe_impl,
+    )
+    x = layers.apply_norm(cfg, params["ln_f"], x)
+    logits = layers.lm_logits(cfg, params["head"], params["embed"], x)
+    return logits, aux
+
+
+def lm_loss(cfg: ArchConfig, params, batch, *, moe_impl="scatter",
+            aux_weight=0.01):
+    """Next-token cross-entropy (+ MoE aux). batch: {tokens, labels,
+    frontend?}. Optional ``cfg.loss_chunk`` computes the head+CE in
+    sequence chunks to bound logits memory."""
+    tokens = batch["tokens"]
+    labels = batch["labels"]
+    x = layers.embed(cfg, params["embed"], tokens)
+    b, s = tokens.shape
+    positions = jnp.arange(s)
+    if cfg.rope_theta == 0.0 and "pos_embed" in params:
+        x = x + params["pos_embed"]["pos"].astype(x.dtype)[None, :s, :]
+    enc_out = None
+    if cfg.family == "audio":
+        enc_out = _run_encoder(cfg, params, batch["frontend"])
+    elif cfg.family == "vlm":
+        enc_out = batch["frontend"].astype(x.dtype)
+    x, _, aux = _run_stack(
+        cfg, params, x, positions=positions, enc_out=enc_out, moe_impl=moe_impl
+    )
+    x = layers.apply_norm(cfg, params["ln_f"], x)
+
+    def ce(xc, yc):
+        logits = layers.lm_logits(cfg, params["head"], params["embed"], xc)
+        logits = logits.astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yc[..., None], axis=-1)[..., 0]
+        return jnp.sum(logz - gold)
+
+    if cfg.loss_chunk and s % cfg.loss_chunk == 0 and s > cfg.loss_chunk:
+        nc = s // cfg.loss_chunk
+        xc = x.reshape(b, nc, cfg.loss_chunk, -1).transpose(1, 0, 2, 3)
+        yc = labels.reshape(b, nc, cfg.loss_chunk).transpose(1, 0, 2)
+
+        def body(tot, inp):
+            xi, yi = inp
+            return tot + ce(xi, yi), None
+
+        total, _ = jax.lax.scan(body, jnp.float32(0.0), (xc, yc))
+    else:
+        total = ce(x, labels)
+    loss = total / (b * s)
+    return loss + aux_weight * aux
+
+
+# ---------------------------------------------------------------- serving
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype=None):
+    """Allocate the decode cache pytree (list per pattern pos, stacked over
+    groups)."""
+    dtype = dtype or layers.cdtype(cfg)
+    pattern = layer_pattern(cfg)
+    ng = n_groups(cfg)
+    kv, hd = cfg.n_kv_heads, cfg.head_dim_
+    caches = []
+    for desc in pattern:
+        if desc.mixer == "attn":
+            c = {
+                "attn": {
+                    "k": jnp.zeros((ng, batch, max_seq, kv, hd), dtype),
+                    "v": jnp.zeros((ng, batch, max_seq, kv, hd), dtype),
+                }
+            }
+        else:
+            c = {
+                "mamba": {
+                    "conv": jnp.zeros(
+                        (ng, batch, cfg.ssm_conv - 1, mamba2.conv_dim(cfg)),
+                        dtype,
+                    ),
+                    "ssm": jnp.zeros(
+                        (
+                            ng,
+                            batch,
+                            cfg.ssm_heads,
+                            cfg.ssm_headdim,
+                            cfg.ssm_state,
+                        ),
+                        dtype,
+                    ),
+                }
+            }
+        caches.append(c)
+    return caches
+
+
+def prefill(cfg: ArchConfig, params, tokens, *, max_seq, frontend=None,
+            moe_impl="scatter"):
+    """Process the prompt, return (last-token logits, cache)."""
+    b, s = tokens.shape
+    x = layers.embed(cfg, params["embed"], tokens)
+    positions = jnp.arange(s)
+    if cfg.rope_theta == 0.0 and "pos_embed" in params:
+        x = x + params["pos_embed"]["pos"].astype(x.dtype)[None, :s, :]
+    enc_out = None
+    if cfg.family == "audio":
+        enc_out = _run_encoder(cfg, params, frontend)
+    elif cfg.family == "vlm":
+        enc_out = frontend.astype(x.dtype)
+
+    caches = init_cache(cfg, b, max_seq)
+    x, new_caches, _ = _run_stack(
+        cfg, params, x, positions=positions, enc_out=enc_out,
+        caches=caches, cache_pos=0, moe_impl=moe_impl,
+    )
+    x = layers.apply_norm(cfg, params["ln_f"], x[:, -1:, :])
+    logits = layers.lm_logits(cfg, params["head"], params["embed"], x)
+    return logits[:, 0, :], new_caches
+
+
+def decode_step(cfg: ArchConfig, params, token, caches, pos, *,
+                enc_out=None, moe_impl="scatter"):
+    """One decode step. token: (B, 1); pos: scalar int32 (current length).
+    Returns (logits (B, V), new_caches)."""
+    x = layers.embed(cfg, params["embed"], token)
+    if enc_out is not None:
+        enc_out = enc_out.astype(layers.cdtype(cfg))
+    positions = jnp.reshape(pos, (1,))
+    if cfg.rope_theta == 0.0 and "pos_embed" in params:
+        pe = jax.lax.dynamic_slice_in_dim(
+            params["pos_embed"]["pos"], pos, 1, 0
+        )
+        x = x + pe.astype(x.dtype)[None]
+    x, new_caches, _ = _run_stack(
+        cfg, params, x, positions=positions, enc_out=enc_out,
+        caches=caches, cache_pos=pos, moe_impl=moe_impl,
+    )
+    x = layers.apply_norm(cfg, params["ln_f"], x)
+    logits = layers.lm_logits(cfg, params["head"], params["embed"], x)
+    return logits[:, 0, :], new_caches

@@ -1,0 +1,175 @@
+"""Mixture-of-Experts layer: top-k routing with capacity, two dispatch
+implementations, shared experts, and expert padding.
+
+* ``scatter`` (default): tokens are moved into the (E, C) expert buffer with
+  a batched scatter-add and gathered back — O(tokens * D) data movement, no
+  fake FLOPs. This is the TPU-friendly dropless-ish path; when experts are
+  sharded over the ``model`` axis XLA lowers the shuffle to all-to-all
+  style collectives.
+* ``einsum`` (GShard classic): one-hot dispatch/combine tensors
+  (G, S, E, C). Kept for §Perf comparison — its dispatch einsum inflates
+  HLO FLOPs by G*S*E*C*D.
+
+Expert-count padding: routed experts are padded up to a multiple of 16
+(the model-axis size) when E >= 16 — e.g. qwen2-moe's 60 -> 64 — with the
+padded experts' router logits pinned to -inf so they are never selected.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, round_up
+from repro.models import layers
+
+
+def n_experts_padded(cfg: ArchConfig) -> int:
+    e = cfg.n_experts
+    return round_up(e, 16) if e >= 16 else e
+
+
+def init_moe(cfg: ArchConfig, key):
+    e = n_experts_padded(cfg)
+    d, f = cfg.d_model, cfg.d_ff_expert
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": layers._init(ks[0], (d, e), scale=0.02),
+        "w_gate": layers._init(ks[1], (e, d, f)),
+        "w_up": layers._init(ks[2], (e, d, f)),
+        "w_down": layers._init(ks[3], (e, f, d)),
+    }
+    if cfg.n_shared_experts > 0:
+        f_sh = cfg.n_shared_experts * cfg.d_ff_expert
+        p["shared"] = layers.init_mlp(cfg, ks[4], d_ff=f_sh)
+    return p
+
+
+def _group(x, group_size=512):
+    """(T, D) -> (G, S, D) with S | T."""
+    t = x.shape[0]
+    s = group_size if t % group_size == 0 else t
+    return x.reshape(t // s, s, x.shape[-1]), s
+
+
+def _route(cfg: ArchConfig, p, xg):
+    """Router probabilities and top-k assignment. xg: (G, S, D)."""
+    e_pad = p["router"].shape[1]
+    logits = jnp.einsum(
+        "gsd,de->gse", xg.astype(jnp.float32), p["router"]
+    )
+    if e_pad > cfg.n_experts:  # mask padded experts
+        pad_mask = jnp.arange(e_pad) >= cfg.n_experts
+        logits = jnp.where(pad_mask[None, None, :], -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, cfg.n_experts_active)  # (G,S,k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+    return probs, gate_vals, idx
+
+
+def _positions_in_expert(idx, e_pad, capacity):
+    """GShard rank-ordered slot assignment.
+
+    idx: (G, S, k) expert choice per token per rank. Returns
+    (pos, keep): pos (G, S, k) slot id within the expert, keep (G, S, k)
+    bool for tokens that fit under capacity.
+    """
+    g, s, k = idx.shape
+    counts = jnp.zeros((g, e_pad), jnp.int32)
+    pos_list, keep_list = [], []
+    for r in range(k):
+        onehot = jax.nn.one_hot(idx[:, :, r], e_pad, dtype=jnp.int32)  # (G,S,E)
+        within = jnp.cumsum(onehot, axis=1) - onehot  # tokens before me, this rank
+        pos_r = jnp.sum(onehot * (within + counts[:, None, :]), axis=-1)
+        keep_r = pos_r < capacity
+        pos_list.append(pos_r)
+        keep_list.append(keep_r)
+        counts = counts + jnp.sum(onehot, axis=1)
+    return jnp.stack(pos_list, -1), jnp.stack(keep_list, -1)
+
+
+def _expert_ffn(cfg, p, xe):
+    """xe: (G, E, C, D) -> (G, E, C, D) via per-expert SwiGLU/GeLU."""
+    dt = xe.dtype
+    if cfg.mlp == "swiglu":
+        gate = jnp.einsum("gecd,edf->gecf", xe, p["w_gate"].astype(dt))
+        up = jnp.einsum("gecd,edf->gecf", xe, p["w_up"].astype(dt))
+        h = jax.nn.silu(gate) * up
+    else:
+        up = jnp.einsum("gecd,edf->gecf", xe, p["w_up"].astype(dt))
+        h = (
+            jnp.square(jax.nn.relu(up))
+            if cfg.mlp == "squared_relu"
+            else jax.nn.gelu(up)
+        )
+    return jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(dt))
+
+
+def apply_moe(cfg: ArchConfig, p, x, *, impl: str = "scatter",
+              group_size: int = 512):
+    """x: (B, S, D) -> (out, aux) where aux = load-balance loss scalar."""
+    b, s, d = x.shape
+    e_pad = p["router"].shape[1]
+    k = cfg.n_experts_active
+    xf = x.reshape(b * s, d)
+    xg, sg = _group(xf, group_size)  # (G, S_g, D)
+    g = xg.shape[0]
+    capacity = max(1, math.ceil(sg * k / cfg.n_experts * cfg.capacity_factor))
+
+    probs, gates, idx = _route(cfg, p, xg)
+    pos, keep = _positions_in_expert(idx, e_pad, capacity)
+
+    # Switch-style load-balance aux loss (rank-0 assignments).
+    frac = jnp.mean(
+        jax.nn.one_hot(idx[:, :, 0], e_pad, dtype=jnp.float32), axis=(0, 1)
+    )
+    aux = cfg.n_experts * jnp.sum(frac * jnp.mean(probs, axis=(0, 1)))
+
+    if impl == "scatter":
+        dest = idx * capacity + pos  # (G, S, k) flat slot in (E*C)
+        dest = jnp.where(keep, dest, e_pad * capacity)  # overflow slot
+        buf = jnp.zeros((g, e_pad * capacity + 1, d), x.dtype)
+
+        def scatter_one(bufg, destg, xgg, keepg):
+            upd = xgg[:, None, :] * keepg[..., None].astype(xgg.dtype)
+            for r in range(k):
+                bufg = bufg.at[destg[:, r]].add(upd[:, r])
+            return bufg
+
+        buf = jax.vmap(scatter_one)(buf, dest, xg, keep)
+        xe = buf[:, : e_pad * capacity].reshape(g, e_pad, capacity, d)
+        ye = _expert_ffn(cfg, p, xe)
+        yflat = ye.reshape(g, e_pad * capacity, d)
+        yflat = jnp.concatenate(
+            [yflat, jnp.zeros((g, 1, d), x.dtype)], axis=1
+        )
+
+        def gather_one(yg, destg, gateg, keepg):
+            out = jnp.zeros((sg, d), x.dtype)
+            for r in range(k):
+                w = (gateg[:, r] * keepg[:, r]).astype(x.dtype)
+                out = out + yg[destg[:, r]] * w[:, None]
+            return out
+
+        out = jax.vmap(gather_one)(yflat, dest, gates, keep)
+    elif impl == "einsum":
+        gk = (gates * keep).astype(x.dtype)  # (G,S,k)
+        oh_e = jax.nn.one_hot(idx, e_pad, dtype=x.dtype)  # (G,S,k,E)
+        oh_c = jax.nn.one_hot(pos, capacity, dtype=x.dtype)  # (G,S,k,C)
+        combine = jnp.einsum("gsk,gske,gskc->gsec", gk, oh_e, oh_c)
+        dispatch = (combine > 0).astype(x.dtype)
+        xe = jnp.einsum("gsec,gsd->gecd", dispatch, xg)
+        ye = _expert_ffn(cfg, p, xe)
+        out = jnp.einsum("gsec,gecd->gsd", combine, ye)
+    else:
+        raise ValueError(impl)
+
+    out = out.reshape(b, s, d)
+    if cfg.n_shared_experts > 0:
+        out = out + layers.apply_mlp(cfg, p["shared"], x)
+    return out, aux

@@ -1,0 +1,80 @@
+"""Atomic, mesh-elastic checkpointing.
+
+Arrays are saved *logically unsharded* (gathered to host), so a restart may
+use a different mesh/pod count — the trainer re-shards on restore. Writes
+are atomic: a temp directory is populated and ``os.replace``d into place,
+and a ``manifest.json`` carries step, config hash and data-pipeline state
+so restarts are sample-exact. ``latest_step`` + ``restore`` implement
+resume-from-latest after preemption or node failure.
+
+(Production note: at 340B scale one would write per-host shards through a
+parallel filesystem; the save format here keeps the same manifest/atomic
+protocol at smoke scale.)
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flat(tree):
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in leaves_with_paths:
+        key = "/".join(str(p) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save(ckpt_dir: str, step: int, state: Any, extra: Optional[Dict] = None):
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    arrays = _flat(state)
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    manifest = {"step": step, "n_arrays": len(arrays), "extra": extra or {}}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            try:
+                steps.append(int(name.split("_")[1]))
+            except ValueError:
+                pass
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, template: Any):
+    """Restore into the structure (and shardings) of ``template``."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    new_leaves = []
+    for p, leaf in leaves_with_paths:
+        key = "/".join(str(x) for x in p)
+        arr = data[key]
+        if hasattr(leaf, "sharding"):
+            arr = jax.device_put(arr.astype(leaf.dtype), leaf.sharding)
+        new_leaves.append(arr)
+    return treedef.unflatten(new_leaves), manifest

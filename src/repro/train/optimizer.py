@@ -1,0 +1,93 @@
+"""AdamW + schedules + global-norm clipping, built from scratch (no optax).
+
+State dtype is configurable (``ArchConfig.optimizer_dtype``): bf16 moments
+halve optimizer HBM for the 340B config (recorded in §Dry-run memory).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray  # scalar int32
+    mu: Any            # first moment (param-shaped pytree)
+    nu: Any            # second moment
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jnp.ndarray], jnp.ndarray] | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    state_dtype: str = "float32"
+
+    def init(self, params) -> OptState:
+        dt = jnp.dtype(self.state_dtype)
+        zeros = lambda p: jnp.zeros(p.shape, dt)
+        return OptState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree.map(zeros, params),
+            nu=jax.tree.map(zeros, params),
+        )
+
+    def _lr(self, step):
+        if callable(self.lr):
+            return self.lr(step)
+        return jnp.float32(self.lr)
+
+    def update(self, grads, state: OptState, params):
+        """Returns (new_params, new_state, grad_norm)."""
+        # Global-norm clip in fp32.
+        sq = sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)
+        )
+        gnorm = jnp.sqrt(sq)
+        scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-9))
+        step = state.step + 1
+        lr = self._lr(step)
+        b1, b2 = self.b1, self.b2
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+        dt = jnp.dtype(self.state_dtype)
+
+        def upd(p, g, m, v):
+            gf = g.astype(jnp.float32) * scale
+            m32 = m.astype(jnp.float32) * b1 + gf * (1 - b1)
+            v32 = v.astype(jnp.float32) * b2 + gf * gf * (1 - b2)
+            mhat = m32 / bc1
+            vhat = v32 / bc2
+            step_ = mhat / (jnp.sqrt(vhat) + self.eps)
+            if self.weight_decay > 0 and p.ndim >= 2:  # no decay on norms
+                step_ = step_ + self.weight_decay * p.astype(jnp.float32)
+            newp = p.astype(jnp.float32) - lr * step_
+            return newp.astype(p.dtype), m32.astype(dt), v32.astype(dt)
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_m = jax.tree.leaves(state.mu)
+        flat_v = jax.tree.leaves(state.nu)
+        out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        return new_p, OptState(step=step, mu=new_m, nu=new_v), gnorm
+
+
+def cosine_warmup(peak_lr: float, warmup: int, total: int, floor: float = 0.1):
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = peak_lr * s / max(warmup, 1)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(s < warmup, warm, cos)
+
+    return lr

@@ -1,0 +1,91 @@
+"""Train-step factory: loss + grad + AdamW update, with microbatch
+accumulation (lax.scan) and optional bf16 gradient compression.
+
+With accumulation, the per-microbatch backward runs inside the scan and the
+parameter all-reduce (DP axis) happens once on the accumulated grads —
+XLA's latency-hiding scheduler overlaps it with the next microbatch's
+compute when the launch scripts enable
+``--xla_tpu_enable_async_collective_fusion`` flags (see launch/train.py).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import model as model_lib
+from repro.train.optimizer import AdamW, OptState
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: OptState
+
+
+def make_train_step(
+    cfg: ArchConfig,
+    optimizer: AdamW,
+    *,
+    accum_steps: int = 1,
+    grad_dtype: str = "float32",  # "bfloat16" = compressed DP all-reduce
+    moe_impl: str = "scatter",
+):
+    """Returns step(state, batch) -> (state, metrics). ``batch`` leaves have
+    leading dim global_batch; with accumulation it is reshaped to
+    (accum, micro, ...) and scanned."""
+
+    def loss_fn(params, microbatch):
+        return model_lib.lm_loss(cfg, params, microbatch, moe_impl=moe_impl)
+
+    def grads_of(params, batch):
+        if accum_steps == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            if grad_dtype != "float32":
+                grads = jax.tree.map(
+                    lambda g: g.astype(jnp.dtype(grad_dtype)), grads
+                )
+            return loss, grads
+
+        def re(x):
+            return x.reshape(accum_steps, x.shape[0] // accum_steps, *x.shape[1:])
+
+        micro = jax.tree.map(re, batch)
+
+        def body(carry, mb):
+            acc, loss_sum = carry
+            loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+            if grad_dtype != "float32":
+                grads = jax.tree.map(
+                    lambda g: g.astype(jnp.dtype(grad_dtype)), grads
+                )
+            acc = jax.tree.map(jnp.add, acc, grads)
+            return (acc, loss_sum + loss), None
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.dtype(grad_dtype)), params
+        )
+        (grads, loss_sum), _ = jax.lax.scan(
+            body, (zeros, jnp.float32(0.0)), micro
+        )
+        inv = 1.0 / accum_steps
+        grads = jax.tree.map(lambda g: g * jnp.asarray(inv, g.dtype), grads)
+        return loss_sum * inv, grads
+
+    def step(state: TrainState, batch: Dict[str, jnp.ndarray]):
+        loss, grads = grads_of(state.params, batch)
+        new_params, new_opt, gnorm = optimizer.update(
+            grads, state.opt, state.params
+        )
+        metrics = {"loss": loss, "grad_norm": gnorm, "step": new_opt.step}
+        return TrainState(new_params, new_opt), metrics
+
+    return step
+
+
+def init_state(cfg: ArchConfig, optimizer: AdamW, key, max_seq: int = 0):
+    params = model_lib.init_params(cfg, key, max_seq=max_seq)
+    return TrainState(params=params, opt=optimizer.init(params))

@@ -1,0 +1,153 @@
+"""Fault-tolerant training loop.
+
+Features (the 1000+-node posture, exercised at smoke scale by tests):
+  * resume-from-latest checkpoint (node failure / preemption restart),
+  * SIGTERM/SIGINT handler -> emergency checkpoint then clean exit,
+  * periodic atomic checkpoints with data-pipeline state in the manifest,
+  * per-step wall-clock watchdog (straggler detection: steps slower than
+    ``watchdog_factor`` x the running median are logged loudly),
+  * mesh-elastic restore: checkpoints are logically unsharded, the trainer
+    re-shards onto whatever mesh it was constructed with.
+"""
+
+from __future__ import annotations
+
+import logging
+import signal
+import statistics
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.data.pipeline import TokenStream
+from repro.train import checkpoint as ckpt_lib
+from repro.train.optimizer import AdamW
+from repro.train.train_step import TrainState, init_state, make_train_step
+
+log = logging.getLogger("repro.trainer")
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        shape: ShapeConfig,
+        optimizer: Optional[AdamW] = None,
+        ckpt_dir: Optional[str] = None,
+        ckpt_every: int = 50,
+        accum_steps: int = 1,
+        seed: int = 0,
+        mesh=None,
+        shardings: Optional[Dict] = None,
+        watchdog_factor: float = 3.0,
+        moe_impl: str = "scatter",
+    ):
+        self.cfg = cfg
+        self.shape = shape
+        self.optimizer = optimizer or AdamW(state_dtype=cfg.optimizer_dtype)
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = ckpt_every
+        self.seed = seed
+        self.mesh = mesh
+        self.watchdog_factor = watchdog_factor
+        self._preempted = False
+
+        step_fn = make_train_step(
+            cfg, self.optimizer, accum_steps=accum_steps, moe_impl=moe_impl
+        )
+        if mesh is not None and shardings is not None:
+            self.step_fn = jax.jit(
+                step_fn,
+                in_shardings=(shardings["state"], shardings["batch"]),
+                out_shardings=(shardings["state"], None),
+                donate_argnums=(0,),
+            )
+        else:
+            self.step_fn = jax.jit(step_fn, donate_argnums=(0,))
+
+    # ---------------------------------------------------------- lifecycle
+    def _install_signal_handlers(self):
+        def handler(signum, frame):
+            log.warning("signal %s received -> emergency checkpoint", signum)
+            self._preempted = True
+
+        for sig in (signal.SIGTERM, signal.SIGINT):
+            try:
+                signal.signal(sig, handler)
+            except ValueError:
+                pass  # not in main thread (tests)
+
+    def init_or_restore(self) -> tuple[TrainState, int]:
+        state = init_state(
+            self.cfg,
+            self.optimizer,
+            jax.random.key(self.seed),
+            max_seq=self.shape.seq_len,
+        )
+        start_step = 0
+        if self.ckpt_dir:
+            latest = ckpt_lib.latest_step(self.ckpt_dir)
+            if latest is not None:
+                state, manifest = ckpt_lib.restore(
+                    self.ckpt_dir, latest, state
+                )
+                start_step = manifest["step"]
+                log.info("restored checkpoint at step %d", start_step)
+        return state, start_step
+
+    # ---------------------------------------------------------- main loop
+    def train(
+        self,
+        n_steps: int,
+        log_every: int = 10,
+        on_metrics: Optional[Callable[[int, Dict], None]] = None,
+    ):
+        self._install_signal_handlers()
+        state, start_step = self.init_or_restore()
+        stream = TokenStream(
+            self.cfg, self.shape, seed=self.seed, start_step=start_step
+        )
+        durations: list[float] = []
+        losses = []
+        step = start_step
+        try:
+            while step < n_steps and not self._preempted:
+                batch = next(stream)
+                batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
+                t0 = time.perf_counter()
+                state, metrics = self.step_fn(state, batch)
+                loss = float(metrics["loss"])  # blocks
+                dt = time.perf_counter() - t0
+                step += 1
+                losses.append(loss)
+
+                # straggler watchdog
+                if len(durations) >= 5:
+                    med = statistics.median(durations[-20:])
+                    if dt > self.watchdog_factor * med:
+                        log.warning(
+                            "straggler step %d: %.3fs vs median %.3fs",
+                            step, dt, med,
+                        )
+                durations.append(dt)
+
+                if step % log_every == 0:
+                    toks = self.shape.global_batch * self.shape.seq_len
+                    log.info(
+                        "step %d loss %.4f %.0f tok/s", step, loss,
+                        toks / max(dt, 1e-9),
+                    )
+                if on_metrics:
+                    on_metrics(step, {**metrics, "seconds": dt})
+                if self.ckpt_dir and step % self.ckpt_every == 0:
+                    ckpt_lib.save(
+                        self.ckpt_dir, step, state, extra=stream.state()
+                    )
+            if self.ckpt_dir and (self._preempted or step >= n_steps):
+                ckpt_lib.save(self.ckpt_dir, step, state, extra=stream.state())
+        finally:
+            stream.close()
+        return state, step, losses

@@ -1,0 +1,69 @@
+"""Stein Variational Gradient Descent (Liu & Wang, 2016) in JAX.
+
+Used for the paper's §4.1 evaluation: after DirectLiNGAM produces the
+weighted adjacency, a Bayesian linear-SEM posterior is approximated with
+SVGD particles and scored on held-out interventions (I-NLL / I-MAE).
+
+    T(x) = x + eps * phi(x),
+    phi(x) = E_{x'~q}[ k(x', x) grad_{x'} log p(x') + grad_{x'} k(x', x) ]
+
+with an RBF kernel using the median heuristic.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def _rbf(particles):
+    """RBF kernel matrix + grad wrt first arg, median-heuristic bandwidth.
+    particles: (n, d). Returns (K (n, n), dK (n, d)) where
+    dK[i] = sum_j grad_{x_i} k(x_i, x_j)."""
+    n = particles.shape[0]
+    diff = particles[:, None, :] - particles[None, :, :]  # (n, n, d)
+    sq = jnp.sum(diff * diff, axis=-1)
+    med = jnp.median(sq)
+    h = jnp.sqrt(0.5 * med / jnp.log(n + 1.0) + 1e-8)
+    k = jnp.exp(-sq / (2 * h * h))
+    # repulsion: sum_j grad_{x_j} k(x_j, x_i) = sum_j (x_i - x_j)/h^2 * k_ij
+    dk = jnp.einsum("ijd,ij->id", diff, k) / (h * h)
+    return k, dk
+
+
+@functools.partial(jax.jit, static_argnames=("logp", "n_steps"))
+def svgd(
+    particles: jnp.ndarray,
+    logp: Callable[[jnp.ndarray], jnp.ndarray],
+    n_steps: int = 500,
+    step_size: float = 1e-2,
+):
+    """Run SVGD. particles: (n, d); logp maps (d,) -> scalar."""
+    grad_logp = jax.vmap(jax.grad(logp))
+
+    def body(parts, _):
+        g = grad_logp(parts)  # (n, d)
+        k, dk = _rbf(parts)
+        phi = (k @ g + dk) / parts.shape[0]
+        return parts + step_size * phi, None
+
+    out, _ = jax.lax.scan(body, particles, None, length=n_steps)
+    return out
+
+
+def gaussian_sem_logp(b_adj, noise_scale, prior_scale=1.0):
+    """log p(x) for the linear SEM x = B x + e with Laplace-ish prior on
+    latents: returns a callable for SVGD over a single sample vector x."""
+    d = b_adj.shape[0]
+    eye = jnp.eye(d, dtype=b_adj.dtype)
+
+    def logp(x):
+        resid = (eye - b_adj) @ x
+        ll = -0.5 * jnp.sum((resid / noise_scale) ** 2)
+        prior = -0.5 * jnp.sum((x / prior_scale) ** 2)
+        return ll + 1e-3 * prior
+
+    return logp

@@ -1,0 +1,137 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step and
+one prefill+decode step on CPU; asserts shapes and finiteness."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ShapeConfig, get_arch, list_archs
+from repro.models import model as model_lib
+
+SMOKE_TRAIN = ShapeConfig("smoke_train", "train", 32, 2)
+SMOKE_PREFILL = ShapeConfig("smoke_prefill", "prefill", 32, 2)
+
+ARCHS = list_archs()
+
+
+def _batch(cfg, shape, seed=0):
+    from repro.launch.input_specs import make_host_batch
+
+    return make_host_batch(cfg, shape, seed=seed)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_and_loss(arch):
+    cfg = get_arch(arch, smoke=True)
+    params = model_lib.init_params(cfg, jax.random.key(0), max_seq=64)
+    batch = _batch(cfg, SMOKE_TRAIN)
+    logits, aux = jax.jit(
+        lambda p, b: model_lib.forward(
+            cfg, p, b["tokens"], frontend=b.get("frontend")
+        )
+    )(params, batch)
+    assert logits.shape == (2, 32, cfg.vocab_padded)
+    assert np.isfinite(np.asarray(logits, dtype=np.float32)).all()
+    loss = jax.jit(lambda p, b: model_lib.lm_loss(cfg, p, b))(params, batch)
+    assert np.isfinite(float(loss)), float(loss)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_grad_step_no_nans(arch):
+    cfg = get_arch(arch, smoke=True)
+    params = model_lib.init_params(cfg, jax.random.key(1), max_seq=64)
+    batch = _batch(cfg, SMOKE_TRAIN, seed=1)
+    grads = jax.jit(
+        jax.grad(lambda p: model_lib.lm_loss(cfg, p, batch))
+    )(params)
+    leaves = jax.tree.leaves(grads)
+    assert leaves
+    for g in leaves:
+        assert np.isfinite(np.asarray(g, dtype=np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_then_decode(arch):
+    cfg = get_arch(arch, smoke=True)
+    params = model_lib.init_params(cfg, jax.random.key(2), max_seq=48)
+    pre = _batch(cfg, SMOKE_PREFILL, seed=2)
+    enc_out = None
+    if cfg.family in ("audio", "vlm"):
+        enc_out = pre["frontend"].astype(jnp.bfloat16)
+
+    last, caches = jax.jit(
+        lambda p, b: model_lib.prefill(
+            cfg, p, b["tokens"], max_seq=48, frontend=b.get("frontend")
+        )
+    )(params, pre)
+    assert last.shape == (2, cfg.vocab_padded)
+    assert np.isfinite(np.asarray(last, np.float32)).all()
+
+    token = jnp.argmax(last[:, : cfg.vocab_size], axis=-1).astype(jnp.int32)[:, None]
+    logits, caches = jax.jit(
+        lambda p, t, c, pos: model_lib.decode_step(
+            cfg, p, t, c, pos, enc_out=enc_out
+        )
+    )(params, token, caches, jnp.int32(32))
+    assert logits.shape == (2, cfg.vocab_padded)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
+def test_decode_consistency_with_forward():
+    """Greedy decode logits must match teacher-forced forward logits."""
+    cfg = get_arch("qwen3-1.7b", smoke=True).replace(compute_dtype="float32")
+    params = model_lib.init_params(cfg, jax.random.key(3), max_seq=16)
+    rng = np.random.default_rng(3)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 8)), jnp.int32)
+
+    full_logits, _ = model_lib.forward(cfg, params, tokens)
+    last, caches = model_lib.prefill(cfg, params, tokens[:, :7], max_seq=16)
+    np.testing.assert_allclose(
+        np.asarray(last), np.asarray(full_logits[:, 6, :]), atol=2e-3
+    )
+    # one decode step with the true 8th token
+    logits, _ = model_lib.decode_step(
+        cfg, params, tokens[:, 7:8], caches, jnp.int32(7)
+    )
+    np.testing.assert_allclose(
+        np.asarray(logits), np.asarray(full_logits[:, 7, :]), atol=2e-3
+    )
+
+
+def test_mamba_decode_consistency():
+    cfg = get_arch("mamba2-2.7b", smoke=True).replace(compute_dtype="float32")
+    params = model_lib.init_params(cfg, jax.random.key(4), max_seq=16)
+    rng = np.random.default_rng(4)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 8)), jnp.int32)
+    full_logits, _ = model_lib.forward(cfg, params, tokens)
+    last, caches = model_lib.prefill(cfg, params, tokens[:, :7], max_seq=16)
+    np.testing.assert_allclose(
+        np.asarray(last), np.asarray(full_logits[:, 6, :]), atol=5e-3
+    )
+    logits, _ = model_lib.decode_step(
+        cfg, params, tokens[:, 7:8], caches, jnp.int32(7)
+    )
+    np.testing.assert_allclose(
+        np.asarray(logits), np.asarray(full_logits[:, 7, :]), atol=5e-3
+    )
+
+
+def test_chunked_attention_matches_dense():
+    """Flash-style chunked attention must equal dense attention."""
+    cfg = get_arch("glm4-9b", smoke=True).replace(
+        compute_dtype="float32", attn_impl="chunked", attn_chunk=8
+    )
+    cfg_d = cfg.replace(attn_impl="dense")
+    params = model_lib.init_params(cfg, jax.random.key(7), max_seq=32)
+    rng = np.random.default_rng(7)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 32)), jnp.int32)
+    lc, _ = model_lib.forward(cfg, params, tokens)
+    ld, _ = model_lib.forward(cfg_d, params, tokens)
+    np.testing.assert_allclose(np.asarray(lc), np.asarray(ld), atol=2e-3)
+    # decode path too
+    last_c, cache_c = model_lib.prefill(cfg, params, tokens[:, :16], max_seq=32)
+    last_d, cache_d = model_lib.prefill(cfg_d, params, tokens[:, :16], max_seq=32)
+    np.testing.assert_allclose(
+        np.asarray(last_c), np.asarray(last_d), atol=2e-3
+    )

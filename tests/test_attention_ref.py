@@ -1,0 +1,82 @@
+"""GQA attention vs a naive per-head reference; RoPE properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_arch
+from repro.models import layers
+
+
+def _naive_gqa(q, k, v, causal=True):
+    """Per-head python-loop attention oracle. q: (B,S,H,hd); k/v (B,S,KV,hd)."""
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    group = h // kv
+    out = np.zeros_like(np.asarray(q, dtype=np.float32))
+    qn, kn, vn = (np.asarray(t, dtype=np.float32) for t in (q, k, v))
+    for bi in range(b):
+        for hi in range(h):
+            ki = hi // group
+            logits = qn[bi, :, hi] @ kn[bi, :, ki].T / np.sqrt(hd)
+            if causal:
+                mask = np.tril(np.ones((s, s), bool))
+                logits = np.where(mask, logits, -1e30)
+            w = np.exp(logits - logits.max(-1, keepdims=True))
+            w /= w.sum(-1, keepdims=True)
+            out[bi, :, hi] = w @ vn[bi, :, ki]
+    return out
+
+
+@pytest.mark.parametrize("h,kv", [(4, 4), (4, 2), (8, 2), (6, 3)])
+def test_sdpa_matches_naive_gqa(h, kv):
+    cfg = get_arch("qwen3-1.7b", smoke=True).replace(
+        compute_dtype="float32", n_heads=h, n_kv_heads=kv
+    )
+    rng = np.random.default_rng(0)
+    b, s, hd = 2, 16, 8
+    q = jnp.asarray(rng.normal(size=(b, s, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, kv, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, kv, hd)), jnp.float32)
+    got = layers._sdpa(cfg, q, k, v, causal=True)
+    want = _naive_gqa(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), want, atol=1e-4)
+
+
+def test_chunked_sdpa_matches_naive():
+    cfg = get_arch("qwen3-1.7b", smoke=True).replace(
+        compute_dtype="float32", n_heads=4, n_kv_heads=2
+    )
+    rng = np.random.default_rng(1)
+    b, s, hd = 1, 32, 8
+    q = jnp.asarray(rng.normal(size=(b, s, 4, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, 2, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, 2, hd)), jnp.float32)
+    got = layers._sdpa_chunked(cfg, q, k, v, True, chunk=8)
+    want = _naive_gqa(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), want, atol=1e-4)
+
+
+def test_rope_preserves_norm_and_relative_position():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(1, 8, 2, 16)), jnp.float32)
+    pos = jnp.arange(8)
+    y = layers.apply_rope(x, pos, theta=10_000.0)
+    # rotation preserves per-head norms
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1),
+        rtol=1e-5,
+    )
+    # relative property: <R_m q, R_n k> depends only on (m - n)
+    q = jnp.asarray(rng.normal(size=(1, 1, 1, 16)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 1, 1, 16)), jnp.float32)
+
+    def dot_at(m, n):
+        qm = layers.apply_rope(q, jnp.array([m]), 10_000.0)
+        kn = layers.apply_rope(k, jnp.array([n]), 10_000.0)
+        return float(jnp.sum(qm * kn))
+
+    np.testing.assert_allclose(dot_at(3, 1), dot_at(7, 5), rtol=1e-4)
+    np.testing.assert_allclose(dot_at(10, 4), dot_at(16, 10), rtol=1e-4)

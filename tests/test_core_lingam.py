@@ -1,0 +1,137 @@
+"""End-to-end behaviour of the parallel DirectLiNGAM / VarLiNGAM vs the
+sequential reference and the simulated ground truth (paper Fig. 3, §3.1)."""
+
+import numpy as np
+import pytest
+
+from repro.baselines import sequential_lingam as seq
+from repro.core import DirectLiNGAM, VarLiNGAM
+from repro.core.ordering import causal_order
+from repro.data.simulate import simulate_lingam, simulate_var_stocks
+
+
+def _order_consistent(order, b_true):
+    """No edge may point from a later to an earlier variable."""
+    d = len(order)
+    pos = np.empty(d, int)
+    pos[np.asarray(order)] = np.arange(d)
+    src, dst = np.nonzero(b_true)  # b[i, j] != 0: j -> i
+    return bool(np.all(pos[dst] < pos[src]))
+
+
+def _f1_shd(b_est, b_true, thresh=0.1):
+    e = np.abs(b_est) > thresh
+    t = b_true != 0
+    tp = np.sum(e & t)
+    fp = np.sum(e & ~t)
+    fn = np.sum(~e & t)
+    prec = tp / max(tp + fp, 1)
+    rec = tp / max(tp + fn, 1)
+    f1 = 2 * prec * rec / max(prec + rec, 1e-12)
+    shd = fp + fn
+    return f1, rec, shd
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_parallel_matches_sequential_order(seed):
+    gt = simulate_lingam(m=2000, d=7, seed=seed)
+    o_seq = seq.causal_order_sequential(gt.data)
+    o_par = np.asarray(causal_order(gt.data, backend="blocked"))
+    assert np.array_equal(o_seq, o_par)
+
+
+def test_pallas_backend_matches_blocked():
+    gt = simulate_lingam(m=1500, d=8, seed=3)
+    o_b = np.asarray(causal_order(gt.data, backend="blocked"))
+    o_p = np.asarray(causal_order(gt.data, backend="pallas", interpret=True))
+    assert np.array_equal(o_b, o_p)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_recovers_true_dag(seed):
+    gt = simulate_lingam(m=5000, d=10, seed=seed)
+    model = DirectLiNGAM(backend="blocked", prune_threshold=0.1).fit(gt.data)
+    assert _order_consistent(model.causal_order_, gt.adjacency)
+    f1, rec, shd = _f1_shd(model.adjacency_, gt.adjacency)
+    assert f1 > 0.9, (f1, shd)
+
+
+def test_adjacency_close_to_truth():
+    gt = simulate_lingam(m=20000, d=8, seed=5)
+    model = DirectLiNGAM(backend="blocked").fit(gt.data)
+    if _order_consistent(model.causal_order_, gt.adjacency):
+        err = np.max(np.abs(model.adjacency_ - gt.adjacency))
+        assert err < 0.1, err
+
+
+def test_adaptive_lasso_sparsifies():
+    gt = simulate_lingam(m=5000, d=8, seed=7)
+    m_ols = DirectLiNGAM(backend="blocked", prune_method="ols").fit(gt.data)
+    m_al = DirectLiNGAM(
+        backend="blocked",
+        prune_method="adaptive_lasso",
+        prune_kwargs=dict(lam=0.05),
+    ).fit(gt.data)
+    nz_true = np.sum(gt.adjacency != 0)
+    nz_al = np.sum(np.abs(m_al.adjacency_) > 1e-3)
+    nz_ols = np.sum(np.abs(m_ols.adjacency_) > 1e-3)
+    assert nz_al <= nz_ols
+    assert nz_al >= nz_true * 0.5
+
+
+def test_ols_matches_sequential_numpy():
+    gt = simulate_lingam(m=3000, d=6, seed=11)
+    order, b_seq = seq.fit_sequential(gt.data)
+    model = DirectLiNGAM(backend="blocked").fit(gt.data)
+    assert np.array_equal(order, model.causal_order_)
+    np.testing.assert_allclose(model.adjacency_, b_seq, atol=2e-3)
+
+
+def test_var_lingam_recovers_structure():
+    x, b0, m1 = simulate_var_stocks(m=8000, d=12, edge_prob=0.15, seed=0)
+    model = VarLiNGAM(lags=1, prune_threshold=0.1).fit(x)
+    f1_b0, _, _ = _f1_shd(model.adjacency_matrices_[0], b0, thresh=0.1)
+    assert f1_b0 > 0.7, f1_b0
+    # Lagged matrix should correlate with the ground truth.
+    th1 = model.adjacency_matrices_[1]
+    mask = m1 != 0
+    if mask.sum() > 0:
+        err = np.abs(th1[mask] - m1[mask]).mean()
+        assert err < 0.2, err
+
+
+@pytest.mark.parametrize("seed", [0, 5])
+def test_staged_compaction_matches_full(seed):
+    """Active-set compaction (§Perf) must produce the identical order."""
+    from repro.core.ordering import causal_order_staged
+
+    gt = simulate_lingam(m=1500, d=13, seed=seed)
+    full = np.asarray(causal_order(gt.data, backend="blocked"))
+    staged = np.asarray(
+        causal_order_staged(gt.data, backend="blocked", min_stage=3)
+    )
+    assert np.array_equal(full, staged), (full, staged)
+
+
+def test_ica_lingam_baseline_recovers():
+    """The original ICA-LiNGAM (2006) baseline recovers simple DAGs —
+    the in-family comparison point for DirectLiNGAM."""
+    from repro.baselines.ica_lingam import ICALiNGAM
+
+    gt = simulate_lingam(m=8000, d=6, seed=2)
+    model = ICALiNGAM(n_steps=300, prune_threshold=0.1).fit(gt.data)
+    f1, rec, shd = _f1_shd(model.adjacency_, gt.adjacency)
+    assert f1 > 0.7, (f1, shd)
+
+
+def test_bootstrap_edge_probabilities():
+    """Bootstrap: true edges get high presence probability, non-edges low."""
+    from repro.core.bootstrap import bootstrap_lingam
+
+    gt = simulate_lingam(m=3000, d=6, seed=4)
+    res = bootstrap_lingam(gt.data, n_sampling=8, threshold=0.1, seed=0)
+    true = gt.adjacency != 0
+    assert res.edge_prob[true].mean() > 0.8, res.edge_prob[true]
+    assert res.edge_prob[~true].mean() < 0.2, res.edge_prob[~true].mean()
+    edges = res.stable_edges(min_prob=0.7)
+    assert len(edges) >= true.sum() * 0.5

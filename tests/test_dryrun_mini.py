@@ -1,0 +1,63 @@
+"""Dry-run integration test on a subprocess debug mesh (8 host devices):
+lower+compile representative cells of each kind — train (dense), decode
+(ssm), prefill (enc-dec audio) — plus the sharded LiNGAM ordering, on both
+a 2-axis and a 3-axis (pod) mesh."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax
+    from repro.launch.dryrun import lower_lm_cell
+    from repro.launch.mesh import make_debug_mesh
+    from repro.core.sharded import make_sharded_causal_order
+
+    cells = [
+        ("qwen3-1.7b", "train_4k"),
+        ("mamba2-2.7b", "decode_32k"),
+        ("whisper-base", "prefill_32k"),
+    ]
+    for pod in (0, 2):
+        mesh = make_debug_mesh(2, 2, pod=pod) if pod else make_debug_mesh(4, 2)
+        for arch, shape in cells:
+            with mesh:
+                lowered, aux = lower_lm_cell(arch, shape, mesh)
+            compiled = lowered.compile()
+            txt = compiled.as_text()
+            assert len(txt) > 0
+            print(f"OK {arch} {shape} pod={pod}", flush=True)
+        fn, m_pad, d_pad = make_sharded_causal_order(
+            mesh, 1024, 32,
+            sample_axes=("pod", "data") if pod else ("data",), chunk=256,
+        )
+        x = jax.ShapeDtypeStruct((m_pad, d_pad), jax.numpy.float32)
+        with mesh:
+            fn.lower(x).compile()
+        print(f"OK lingam pod={pod}", flush=True)
+    print("DRYRUN_MINI_OK")
+    """
+)
+
+
+@pytest.mark.slow
+def test_dryrun_mini_mesh():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", _SCRIPT],
+        capture_output=True,
+        text=True,
+        env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=1200,
+    )
+    assert out.returncode == 0, (out.stdout[-2000:], out.stderr[-3000:])
+    assert "DRYRUN_MINI_OK" in out.stdout

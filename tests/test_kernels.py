@@ -1,0 +1,125 @@
+"""Pallas pairwise-stats kernel vs the pure-jnp oracle: shape/dtype sweep."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.pairwise_stats import pairwise_moments_pallas
+
+RNG = np.random.default_rng(42)
+
+
+def _make(m, d, dtype=np.float32, dist="laplace"):
+    if dist == "laplace":
+        x = RNG.laplace(size=(m, d))
+    else:
+        x = RNG.uniform(size=(m, d))
+    x = x.astype(dtype)
+    xs = ops.standardize(jnp.asarray(x, dtype=jnp.float32))
+    c = ops.correlation(xs)
+    return xs, c
+
+
+def _offdiag_close(a, b, d, atol):
+    mask = 1.0 - jnp.eye(d)
+    np.testing.assert_allclose(
+        np.asarray(a * mask), np.asarray(b * mask), atol=atol, rtol=0
+    )
+
+
+@pytest.mark.parametrize(
+    "m,d",
+    [(64, 4), (100, 5), (257, 10), (511, 16), (1000, 33), (2048, 64), (4096, 130)],
+)
+def test_pallas_matches_oracle_shapes(m, d):
+    xs, c = _make(m, d)
+    m1r, m2r = ref.pairwise_moments_ref(xs, c)
+    m1p, m2p = ops.pairwise_moments(xs, c, backend="pallas", interpret=True)
+    _offdiag_close(m1r, m1p, d, atol=2e-6)
+    _offdiag_close(m2r, m2p, d, atol=2e-6)
+
+
+@pytest.mark.parametrize("m,d", [(300, 7), (1024, 24)])
+def test_blocked_matches_oracle(m, d):
+    xs, c = _make(m, d)
+    m1r, m2r = ref.pairwise_moments_ref(xs, c)
+    m1b, m2b = ops.pairwise_moments(xs, c, backend="blocked")
+    _offdiag_close(m1r, m1b, d, atol=2e-6)
+    _offdiag_close(m2r, m2b, d, atol=2e-6)
+
+
+@pytest.mark.parametrize("bi,bj,bm", [(8, 8, 256), (8, 128, 512), (16, 16, 256)])
+def test_pallas_block_shape_sweep(bi, bj, bm):
+    m, d = 777, 40
+    xs, c = _make(m, d)
+    m1r, m2r = ref.pairwise_moments_ref(xs, c)
+    d_pad = ((d + max(bi, bj) - 1) // max(bi, bj)) * max(bi, bj)
+    m_pad = ((m + bm - 1) // bm) * bm
+    xt = jnp.pad(xs.T, ((0, d_pad - d), (0, m_pad - m)))
+    cp = jnp.pad(c, ((0, d_pad - d), (0, d_pad - d)))
+    m1p, m2p = pairwise_moments_pallas(
+        xt, cp, m_total=m, bi=bi, bj=bj, bm=bm, interpret=True
+    )
+    _offdiag_close(m1r, m1p[:d, :d], d, atol=2e-6)
+    _offdiag_close(m2r, m2p[:d, :d], d, atol=2e-6)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+@pytest.mark.parametrize("dist", ["laplace", "uniform"])
+def test_pallas_dtype_dist_sweep(dtype, dist):
+    m, d = 500, 12
+    xs, c = _make(m, d, dtype=dtype, dist=dist)
+    m1r, m2r = ref.pairwise_moments_ref(xs, c)
+    m1p, m2p = ops.pairwise_moments(xs, c, backend="pallas", interpret=True)
+    _offdiag_close(m1r, m1p, d, atol=2e-6)
+    _offdiag_close(m2r, m2p, d, atol=2e-6)
+
+
+def test_bf16_input_upcast():
+    m, d = 512, 16
+    x = RNG.laplace(size=(m, d)).astype(np.float32)
+    xs32 = ops.standardize(jnp.asarray(x))
+    c32 = ops.correlation(xs32)
+    xs16 = xs32.astype(jnp.bfloat16)
+    m1r, _ = ref.pairwise_moments_ref(xs32, c32)
+    m1p, _ = ops.pairwise_moments(
+        xs16.astype(jnp.float32), c32, backend="pallas", interpret=True
+    )
+    # bf16 data has ~3 decimal digits; moments agree loosely.
+    _offdiag_close(m1r, m1p, d, atol=1e-2)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, "bfloat16"])
+def test_fused_kernel_matches_oracle(dtype):
+    """Fused standardize+moments kernel (raw X in, optional bf16 streaming)
+    vs the standardize-then-oracle pipeline (§Perf C2+C3)."""
+    from repro.kernels.fused_stats import fused_moment_sums
+
+    m, d, tile = 512, 16, 8
+    x = RNG.laplace(size=(m, d)).astype(np.float32)
+    xs = ops.standardize(jnp.asarray(x))
+    c = ops.correlation(xs)
+    m1r, m2r = ref.pairwise_moments_ref(xs, c)
+
+    mu = jnp.mean(jnp.asarray(x), axis=0)
+    sd = jnp.maximum(jnp.std(jnp.asarray(x), axis=0), 1e-12)
+    rstd = 1.0 / sd
+    xr = jnp.asarray(x).T  # (d, m) raw
+    if dtype == "bfloat16":
+        xr = xr.astype(jnp.bfloat16)
+    s1, s2 = fused_moment_sums(
+        xr[:tile], xr, mu[:tile], mu, rstd[:tile], rstd, c[:tile],
+        m_total=m, bi=8, bj=8, bm=256, interpret=True,
+    )
+    atol = 2e-6 if dtype == np.float32 else 5e-2
+    # mask the degenerate self-pair entries (i, i) of the (tile, d) slab
+    mask = 1.0 - jnp.eye(tile, d)
+    np.testing.assert_allclose(
+        np.asarray(m1r[:tile] * m * mask), np.asarray(s1 * mask),
+        atol=atol * m, rtol=0,
+    )
+    np.testing.assert_allclose(
+        np.asarray(m2r[:tile] * m * mask), np.asarray(s2 * mask),
+        atol=atol * m, rtol=0,
+    )

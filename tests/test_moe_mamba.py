@@ -1,0 +1,89 @@
+"""MoE and Mamba2 layer invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_arch
+from repro.models import mamba2, moe
+from repro.models.moe import apply_moe, init_moe, n_experts_padded
+
+
+def _moe_cfg(**kw):
+    return get_arch("qwen2-moe-a2.7b", smoke=True).replace(
+        compute_dtype="float32", **kw
+    )
+
+
+def test_expert_padding_counts():
+    assert n_experts_padded(get_arch("qwen2-moe-a2.7b")) == 64  # 60 -> 64
+    assert n_experts_padded(get_arch("olmoe-1b-7b")) == 64      # already 64
+    assert n_experts_padded(get_arch("jamba-v0.1-52b")) == 16   # unchanged
+    smoke = get_arch("qwen2-moe-a2.7b", smoke=True)
+    assert n_experts_padded(smoke) == smoke.n_experts  # tiny: no padding
+
+
+def test_padded_experts_never_selected():
+    cfg = get_arch("qwen2-moe-a2.7b", smoke=True).replace(n_experts=6)
+    # force padding by pretending 17 experts -> pads to 32
+    cfg17 = cfg.replace(n_experts=17, n_experts_active=2)
+    p = init_moe(cfg17, jax.random.key(0))
+    assert p["router"].shape[1] == 32
+    x = jax.random.normal(jax.random.key(1), (2, 16, cfg17.d_model))
+    probs, gates, idx = moe._route(cfg17, p, x.reshape(1, 32, -1))
+    assert int(jnp.max(idx)) < 17  # padded experts (17..31) never routed
+
+
+def test_scatter_matches_einsum_dispatch():
+    cfg = _moe_cfg(capacity_factor=8.0)  # high capacity: no token drops
+    p = init_moe(cfg, jax.random.key(2))
+    x = jax.random.normal(jax.random.key(3), (2, 16, cfg.d_model)) * 0.5
+    y_s, aux_s = apply_moe(cfg, p, x, impl="scatter", group_size=16)
+    y_e, aux_e = apply_moe(cfg, p, x, impl="einsum", group_size=16)
+    np.testing.assert_allclose(
+        np.asarray(y_s), np.asarray(y_e), atol=1e-4
+    )
+    np.testing.assert_allclose(float(aux_s), float(aux_e), rtol=1e-5)
+
+
+def test_capacity_drops_tokens_not_crash():
+    cfg = _moe_cfg(capacity_factor=0.25)  # aggressive dropping
+    p = init_moe(cfg, jax.random.key(4))
+    x = jax.random.normal(jax.random.key(5), (2, 32, cfg.d_model))
+    y, aux = apply_moe(cfg, p, x, impl="scatter", group_size=32)
+    assert np.isfinite(np.asarray(y)).all()
+    # shared experts still serve dropped tokens -> output nonzero
+    assert float(jnp.mean(jnp.abs(y))) > 0
+
+
+def test_mamba_chunk_size_invariance():
+    """SSD output must not depend on the chunk size (algebraic identity)."""
+    cfg = get_arch("mamba2-2.7b", smoke=True).replace(compute_dtype="float32")
+    p = mamba2.init_mamba(cfg, jax.random.key(6))
+    x = jax.random.normal(jax.random.key(7), (2, 64, cfg.d_model)) * 0.5
+    outs = []
+    for q in (8, 16, 32, 64):
+        cfg_q = cfg.replace(ssm_chunk=q)
+        y, _ = mamba2.apply_mamba(cfg_q, p, x)
+        outs.append(np.asarray(y))
+    for y in outs[1:]:
+        np.testing.assert_allclose(outs[0], y, atol=2e-4)
+
+
+def test_mamba_prefill_state_continues_sequence():
+    """prefill(x[:t]) state + decode steps == full forward outputs."""
+    cfg = get_arch("mamba2-2.7b", smoke=True).replace(compute_dtype="float32")
+    p = mamba2.init_mamba(cfg, jax.random.key(8))
+    x = jax.random.normal(jax.random.key(9), (1, 12, cfg.d_model)) * 0.5
+    y_full, _ = mamba2.apply_mamba(cfg, p, x)
+    y_pre, cache = mamba2.apply_mamba(cfg, p, x[:, :8], return_cache=True)
+    np.testing.assert_allclose(
+        np.asarray(y_full[:, :8]), np.asarray(y_pre), atol=2e-4
+    )
+    ys = []
+    for t in range(8, 12):
+        y_t, cache = mamba2.apply_mamba_decode(cfg, p, x[:, t : t + 1], cache)
+        ys.append(np.asarray(y_t))
+    got = np.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_full[:, 8:]), got, atol=2e-3)

@@ -1,0 +1,87 @@
+"""Hypothesis property-based tests on system invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import measures
+from repro.core.ordering import ordering_scores
+from repro.kernels import ops
+
+_SETTINGS = dict(max_examples=20, deadline=None, derandomize=True)
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    m=st.integers(50, 400),
+    d=st.integers(2, 12),
+)
+@settings(**_SETTINGS)
+def test_standardize_moments(seed, m, d):
+    rng = np.random.default_rng(seed)
+    x = rng.laplace(size=(m, d)).astype(np.float32) * rng.uniform(0.5, 5.0, d)
+    xs = np.asarray(ops.standardize(jnp.asarray(x)))
+    np.testing.assert_allclose(xs.mean(axis=0), 0.0, atol=1e-4)
+    np.testing.assert_allclose(xs.std(axis=0), 1.0, atol=1e-3)
+
+
+@given(seed=st.integers(0, 2**31 - 1), m=st.integers(100, 500))
+@settings(**_SETTINGS)
+def test_entropy_upper_bounded_by_gaussian(seed, m):
+    """The max-entropy approximation is H_gauss minus non-negative terms."""
+    rng = np.random.default_rng(seed)
+    u = rng.laplace(size=m)
+    u = (u - u.mean()) / u.std()
+    h = float(measures.entropy(jnp.asarray(u, dtype=jnp.float32)))
+    h_gauss = 0.5 * (1.0 + np.log(2 * np.pi))
+    assert h <= h_gauss + 1e-6
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.floats(0.1, 10.0),
+    shift=st.floats(-5.0, 5.0),
+)
+@settings(**_SETTINGS)
+def test_scores_affine_invariant(seed, scale, shift):
+    """k_list scores are invariant to positive affine rescaling of columns
+    (standardization removes location/scale)."""
+    rng = np.random.default_rng(seed)
+    x = rng.laplace(size=(300, 6)).astype(np.float32)
+    active = jnp.ones(6, dtype=bool)
+    k1, _, _ = ordering_scores(jnp.asarray(x), active)
+    k2, _, _ = ordering_scores(jnp.asarray(x * scale + shift), active)
+    np.testing.assert_allclose(np.asarray(k1), np.asarray(k2), atol=5e-3)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(**_SETTINGS)
+def test_correlation_properties(seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((200, 8)).astype(np.float32)
+    xs = ops.standardize(jnp.asarray(x))
+    c = np.asarray(ops.correlation(xs))
+    np.testing.assert_allclose(c, c.T, atol=1e-5)
+    np.testing.assert_allclose(np.diag(c), 1.0, atol=1e-4)
+    assert np.all(np.abs(c) <= 1.0 + 1e-4)
+
+
+@given(seed=st.integers(0, 2**31 - 1), m=st.integers(64, 300), d=st.integers(2, 10))
+@settings(**_SETTINGS)
+def test_pairwise_moments_sample_permutation_invariant(seed, m, d):
+    """Moments are means over samples -> invariant to sample shuffling."""
+    rng = np.random.default_rng(seed)
+    x = rng.laplace(size=(m, d)).astype(np.float32)
+    perm = rng.permutation(m)
+    xs1 = ops.standardize(jnp.asarray(x))
+    xs2 = ops.standardize(jnp.asarray(x[perm]))
+    c1, c2 = ops.correlation(xs1), ops.correlation(xs2)
+    m1a, m2a = ops.pairwise_moments(xs1, c1, backend="blocked")
+    m1b, m2b = ops.pairwise_moments(xs2, c2, backend="blocked")
+    mask = 1.0 - jnp.eye(d)
+    np.testing.assert_allclose(
+        np.asarray(m1a * mask), np.asarray(m1b * mask), atol=1e-5
+    )
+    np.testing.assert_allclose(
+        np.asarray(m2a * mask), np.asarray(m2b * mask), atol=1e-5
+    )

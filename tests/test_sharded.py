@@ -1,0 +1,116 @@
+"""Sharded (shard_map) causal ordering == single-device ordering.
+
+Runs in a subprocess with XLA_FLAGS forcing 8 host devices so the main
+test process keeps seeing exactly 1 device (per the dry-run contract).
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core.ordering import causal_order
+    from repro.core.sharded import sharded_causal_order
+    from repro.data.simulate import simulate_lingam
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    for seed in (0, 1):
+        gt = simulate_lingam(m=2000, d=9, seed=seed)
+        ref = np.asarray(causal_order(jnp.asarray(gt.data)))
+        with mesh:
+            got = np.asarray(
+                sharded_causal_order(gt.data, mesh, chunk=256)
+            )
+        assert np.array_equal(ref, got), (seed, ref, got)
+    # pod-style 3-axis mesh
+    mesh3 = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    gt = simulate_lingam(m=1600, d=7, seed=3)
+    ref = np.asarray(causal_order(jnp.asarray(gt.data)))
+    with mesh3:
+        got = np.asarray(
+            sharded_causal_order(
+                gt.data, mesh3, sample_axes=("pod", "data"), chunk=200
+            )
+        )
+    assert np.array_equal(ref, got), (ref, got)
+    print("SHARDED_OK")
+    """
+)
+
+
+@pytest.mark.slow
+def test_sharded_matches_single_device():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", _SCRIPT],
+        capture_output=True,
+        text=True,
+        env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=900,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "SHARDED_OK" in out.stdout
+
+
+_PALLAS_SCRIPT = _SCRIPT.replace(
+    "sharded_causal_order(gt.data, mesh, chunk=256)",
+    "sharded_causal_order(gt.data, mesh, chunk=256, backend='pallas')",
+).replace(
+    'sample_axes=("pod", "data"), chunk=200',
+    'sample_axes=("pod", "data"), chunk=200, backend="pallas"',
+)
+
+
+@pytest.mark.slow
+def test_sharded_pallas_backend_matches():
+    """The Pallas kernel composed with shard_map == single-device order."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", _PALLAS_SCRIPT],
+        capture_output=True,
+        text=True,
+        env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=1200,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "SHARDED_OK" in out.stdout
+
+
+_FUSED_SCRIPT = _SCRIPT.replace(
+    "sharded_causal_order(gt.data, mesh, chunk=256)",
+    "sharded_causal_order(gt.data, mesh, chunk=256, fused_standardize=True)",
+).replace(
+    'sample_axes=("pod", "data"), chunk=200',
+    'sample_axes=("pod", "data"), chunk=200, fused_standardize=True',
+)
+
+
+@pytest.mark.slow
+def test_sharded_fused_standardize_matches():
+    """§Perf C2: raw-matmul + affine-fold correlation == reference order."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", _FUSED_SCRIPT],
+        capture_output=True, text=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=1200,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "SHARDED_OK" in out.stdout
