@@ -1,6 +1,7 @@
-"""LM-substrate throughput smoke benchmark: one train step + one decode
-step per assigned architecture (reduced configs, CPU) — proves every arch
-is runnable end-to-end and gives a relative cost profile."""
+"""Model throughput smoke benchmark: one train step + one decode step per
+assigned LM architecture, plus one functional-core DirectLiNGAM fit per
+``lingam_workloads`` cell (reduced shapes, CPU) — proves every workload is
+runnable end-to-end and gives a relative cost profile."""
 
 from __future__ import annotations
 
@@ -11,6 +12,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ShapeConfig, get_arch, list_archs
+from repro.configs.lingam_workloads import WORKLOADS
+from repro.core import api as lingam_api
 from repro.models import model as model_lib
 from repro.train.optimizer import AdamW
 from repro.train.train_step import init_state, make_train_step
@@ -18,8 +21,28 @@ from repro.train.train_step import init_state, make_train_step
 SHAPE = ShapeConfig("bench", "train", 64, 2)
 
 
-def run(quick: bool = True):
+def _run_lingam(quick: bool):
+    """One ``api.fit_fn`` fit per workload cell (smoke-scaled in quick)."""
     rows = []
+    for w in WORKLOADS.values():
+        m = min(w.m, 2048) if quick else min(w.m, 16384)
+        d = min(w.d, 16) if quick else min(w.d, 64)
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.laplace(size=(m, d)).astype(np.float32))
+        config = lingam_api.FitConfig(compaction="staged")
+        res = lingam_api.fit_fn(x, config)  # compile
+        jax.block_until_ready(res.adjacency)
+        t0 = time.perf_counter()
+        res = lingam_api.fit_fn(x, config)
+        jax.block_until_ready(res.adjacency)
+        dt = time.perf_counter() - t0
+        rows.append({"arch": w.name, "m": m, "d": d, "fit_s": dt})
+        print(f"bench_models,{w.name},m={m},d={d},fit_s={dt:.3f}")
+    return rows
+
+
+def run(quick: bool = True):
+    rows = _run_lingam(quick)
     archs = list_archs() if not quick else list_archs()[:10]
     for arch in archs:
         cfg = get_arch(arch, smoke=True)

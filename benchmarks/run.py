@@ -17,6 +17,7 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from benchmarks import (  # noqa: E402
+    bench_bootstrap,
     bench_equivalence,
     bench_gene,
     bench_models,
@@ -32,6 +33,7 @@ BENCHES = {
     "gene": bench_gene.run,                # paper Table 1
     "stocks": bench_stocks.run,            # paper Fig. 4 / Table 2
     "models": bench_models.run,            # substrate throughput smoke
+    "bootstrap": bench_bootstrap.run,      # loop vs vmap-batched engine
 }
 
 

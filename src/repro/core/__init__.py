@@ -1,6 +1,14 @@
+from .api import FitConfig, FitResult, fit_fn  # noqa: F401
+from .batched import (  # noqa: F401
+    bootstrap_fits,
+    fit_many,
+    resample_indices,
+)
+from .bootstrap import BootstrapResult, bootstrap_lingam  # noqa: F401
 from .direct_lingam import DirectLiNGAM, fit_direct_lingam  # noqa: F401
 from .ordering import (  # noqa: F401
     causal_order,
+    causal_order_compact,
     causal_order_staged,
     ordering_scores,
 )

@@ -1,0 +1,129 @@
+"""Functional estimator core: pure, jittable DirectLiNGAM fits.
+
+The stateful ``DirectLiNGAM`` / ``VarLiNGAM`` dataclasses are facades over
+the two types here:
+
+  * :class:`FitConfig` — frozen, hashable estimator settings. Passed as a
+    *static* argument, so each distinct config compiles its own program.
+  * :class:`FitResult` — a registered pytree (order, adjacency,
+    diagnostics) that flows freely through ``jit``/``vmap``/``scan``.
+
+``fit_fn(x, config)`` is the whole fit — ordering + adjacency +
+diagnostics — as one traced program with no host round-trips, which is
+what makes the batched engine in :mod:`repro.core.batched` possible:
+``vmap(fit_fn)`` over resamples or datasets is a single compile.
+
+    from repro.core import api
+    res = api.fit_fn(x, api.FitConfig(backend="pallas"))
+    res.order       # (d,) int32 causal order
+    res.adjacency   # (d, d) f32 connection strengths
+    res.resid_var   # (d,) f32 residual noise variances
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import ordering, pruning
+
+
+@dataclasses.dataclass(frozen=True)
+class FitConfig:
+    """Static (hashable) configuration of one DirectLiNGAM fit.
+
+    ``prune_kwargs`` is stored as a sorted tuple of (key, value) pairs so
+    the config stays hashable; passing a dict is fine — it is normalized
+    on construction.
+
+    ``compaction`` selects the ordering schedule:
+      * ``"none"``   — the full masked scan (d identical steps; exact
+                       legacy behaviour of ``ordering.causal_order``).
+      * ``"staged"`` — in-trace active-set compaction
+                       (``ordering.causal_order_compact``): same order,
+                       ~2x fewer FLOPs, still a single compile.
+    """
+
+    backend: str = "blocked"
+    interpret: bool = True
+    prune_method: str = "ols"
+    prune_threshold: float = 0.0
+    prune_kwargs: Tuple[Tuple[str, Any], ...] = ()
+    compaction: str = "none"
+    compaction_frac: float = 0.25
+    min_stage: int = 8
+
+    def __post_init__(self):
+        if isinstance(self.prune_kwargs, dict):
+            object.__setattr__(
+                self, "prune_kwargs", tuple(sorted(self.prune_kwargs.items()))
+            )
+
+    @property
+    def prune_kwargs_dict(self) -> Dict[str, Any]:
+        return dict(self.prune_kwargs)
+
+
+@dataclasses.dataclass
+class FitResult:
+    """One fit as a pytree. Under ``vmap`` every leaf gains the batch axis
+    (``order``: (b, d), ``adjacency``: (b, d, d), ...)."""
+
+    order: jax.Array       # (d,) int32 — position p holds the variable index
+    adjacency: jax.Array   # (d, d) f32 — B[i, j] = effect of x_j on x_i
+    resid_var: jax.Array   # (d,) f32 — Var(x_i - B_i x) diagnostic
+
+
+jax.tree_util.register_dataclass(
+    FitResult,
+    data_fields=["order", "adjacency", "resid_var"],
+    meta_fields=[],
+)
+
+
+def _order_for_config(x, config: FitConfig):
+    if config.compaction == "none":
+        return ordering._causal_order_impl(
+            x, backend=config.backend, interpret=config.interpret
+        )
+    if config.compaction == "staged":
+        return ordering._causal_order_compact_impl(
+            x,
+            backend=config.backend,
+            interpret=config.interpret,
+            frac=config.compaction_frac,
+            min_stage=config.min_stage,
+        )
+    raise ValueError(f"unknown compaction: {config.compaction}")
+
+
+def fit_impl(x, config: FitConfig) -> FitResult:
+    """Unjitted trace body of :func:`fit_fn` (for callers composing larger
+    programs — ``vmap`` in the batched engine, ``shard_map``, ...)."""
+    x = x.astype(jnp.float32)
+    order = _order_for_config(x, config)
+    b = pruning.estimate_adjacency(
+        x,
+        order,
+        method=config.prune_method,
+        threshold=config.prune_threshold,
+        **config.prune_kwargs_dict,
+    )
+    xc = x - jnp.mean(x, axis=0, keepdims=True)
+    resid = xc - xc @ b.T
+    resid_var = jnp.mean(resid * resid, axis=0)
+    return FitResult(order=order, adjacency=b, resid_var=resid_var)
+
+
+@functools.partial(jax.jit, static_argnames=("config",))
+def fit_fn(x, config: FitConfig = FitConfig()) -> FitResult:
+    """Pure DirectLiNGAM fit: (m, d) data + static config -> FitResult.
+
+    The entire fit is one traced program (ordering scan, adjacency solve,
+    diagnostics); no host transfers occur until the caller reads a leaf.
+    """
+    return fit_impl(x, config)

@@ -6,6 +6,34 @@ Resamples rows with replacement, refits DirectLiNGAM per resample (the
 accelerated ordering makes this affordable — the whole point of the
 paper), and returns edge-presence probabilities plus coefficient
 means/stds. Deterministic under a seed.
+
+Two execution strategies share one on-device index matrix
+(:func:`repro.core.batched.resample_indices`), so they fit *identical*
+resamples and their summaries agree:
+
+  * ``strategy="vmap"`` — the batched engine: ``vmap(fit_fn)`` over all
+    resamples inside a single jitted program (the gather, every ordering
+    scan, and every adjacency solve compile exactly once; the cheap edge
+    statistics reduce host-side so threshold sweeps reuse the compile
+    cache). By default it orders with in-trace staged compaction
+    (``compaction="staged"``), which provably returns the same causal
+    order as the full masked scan at ~2x fewer FLOPs — together with
+    batching this is the multi-x throughput win measured by
+    ``benchmarks/bench_bootstrap.py``.
+  * ``strategy="loop"`` — the legacy host loop, one ``fit_fn`` call per
+    resample in O(m * d) memory. Kept as the fallback for
+    memory-constrained shapes (the vmap engine materializes the
+    (n_sampling, m, d) resample stack) and as the equivalence oracle for
+    the engine's tests.
+  * ``strategy="auto"`` (default) — vmap when ~4x the resample stack
+    (the program's live working set) fits ``max_vmap_bytes`` (default
+    1 GiB), loop otherwise: paper-scale cells like (m=1e6, d=100,
+    n=100) keep working instead of OOMing inside one 40 GB program.
+
+Pass ``config=FitConfig(...)`` to pin every estimator setting explicitly
+(both strategies honor it verbatim); ``model=DirectLiNGAM(...)`` adopts
+*all* of the model's settings (backend, interpret, prune method/
+threshold/kwargs) — not just the prune fields.
 """
 
 from __future__ import annotations
@@ -15,7 +43,8 @@ from typing import Optional
 
 import numpy as np
 
-from repro.core.direct_lingam import DirectLiNGAM
+from repro.core import batched
+from repro.core.api import FitConfig, fit_fn
 
 
 @dataclasses.dataclass
@@ -36,34 +65,70 @@ class BootstrapResult:
         return sorted(out, key=lambda t: -t[2])
 
 
-def bootstrap_lingam(
-    x,
-    n_sampling: int = 20,
-    threshold: float = 0.05,
-    seed: int = 0,
-    backend: str = "blocked",
-    model: Optional[DirectLiNGAM] = None,
-) -> BootstrapResult:
-    x = np.asarray(x, dtype=np.float32)
-    m, d = x.shape
-    rng = np.random.default_rng(seed)
-    present = np.zeros((d, d))
-    coefs = np.zeros((n_sampling, d, d), dtype=np.float32)
-    for s in range(n_sampling):
-        idx = rng.integers(0, m, size=m)
-        mdl = model or DirectLiNGAM(backend=backend)
-        mdl = DirectLiNGAM(
-            backend=backend,
-            prune_method=mdl.prune_method,
-            prune_threshold=mdl.prune_threshold,
-        )
-        mdl.fit(x[idx])
-        b = mdl.adjacency_
-        coefs[s] = b
-        present += (np.abs(b) > threshold).astype(float)
+def _resolve_config(
+    backend: str,
+    model,
+    config: Optional[FitConfig],
+    strategy: str,
+) -> FitConfig:
+    """Estimator settings, in priority: explicit config > model > args.
+
+    A passed model is adopted verbatim (including its ``compaction``).
+    Only when neither config nor model is given does the strategy pick
+    the ordering schedule: the vmap engine defaults to staged compaction
+    (same order, ~2x fewer FLOPs); the loop fallback keeps the legacy
+    full scan.
+    """
+    if config is not None:
+        return config
+    if model is not None:
+        return model.to_config()
+    compaction = "staged" if strategy == "vmap" else "none"
+    return FitConfig(backend=backend, compaction=compaction)
+
+
+def _summarize(coefs: np.ndarray, threshold: float) -> BootstrapResult:
+    """Shared (strategy-independent) reduction of stacked coefficients."""
+    n_sampling = coefs.shape[0]
+    present = (np.abs(coefs) > threshold).astype(float).sum(axis=0)
     return BootstrapResult(
         edge_prob=present / n_sampling,
         coef_mean=coefs.mean(axis=0),
         coef_std=coefs.std(axis=0),
         n_sampling=n_sampling,
     )
+
+
+def bootstrap_lingam(
+    x,
+    n_sampling: int = 20,
+    threshold: float = 0.05,
+    seed: int = 0,
+    backend: str = "blocked",
+    model=None,
+    strategy: str = "auto",
+    config: Optional[FitConfig] = None,
+    max_vmap_bytes: int = 1 << 30,
+) -> BootstrapResult:
+    x = np.asarray(x, dtype=np.float32)
+    m, d = x.shape
+    if strategy == "auto":
+        # The vmapped program holds several live (n_sampling, m, d) fp32
+        # buffers at once (resample stack, scan carry, standardized
+        # view), so budget ~4x the raw stack.
+        est_bytes = 4 * (4 * n_sampling * m * d)
+        strategy = "vmap" if est_bytes <= max_vmap_bytes else "loop"
+    cfg = _resolve_config(backend, model, config, strategy)
+    indices = batched.resample_indices(seed, n_sampling, m)
+
+    if strategy == "vmap":
+        results = batched.bootstrap_fits(x, indices, config=cfg)
+        coefs = np.asarray(results.adjacency)
+    elif strategy == "loop":
+        idx = np.asarray(indices)
+        coefs = np.empty((n_sampling, d, d), dtype=np.float32)
+        for s in range(n_sampling):
+            coefs[s] = np.asarray(fit_fn(x[idx[s]], cfg).adjacency)
+    else:
+        raise ValueError(f"unknown strategy: {strategy}")
+    return _summarize(coefs, threshold)

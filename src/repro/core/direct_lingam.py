@@ -11,6 +11,14 @@ identifiability guarantees, as the paper stresses); only the execution is
 parallel. ``backend`` picks the pairwise-moment implementation:
 "blocked" (vectorized jnp), "pallas" (TPU kernel; interpret=True on CPU),
 or "ref" (small-problem oracle).
+
+This class is a thin stateful facade over the functional core: ``fit``
+builds a static :class:`~repro.core.api.FitConfig` and runs the pure
+``api.fit_fn`` (one traced program), then materializes the result as
+numpy attributes. Batched / bootstrap workloads should use
+``repro.core.batched`` (``fit_many``) or
+``repro.core.bootstrap.bootstrap_lingam`` directly, which vmap the same
+``fit_fn`` instead of looping over facades.
 """
 
 from __future__ import annotations
@@ -21,7 +29,7 @@ from typing import Optional
 import jax.numpy as jnp
 import numpy as np
 
-from . import ordering, pruning
+from . import api
 
 
 @dataclasses.dataclass
@@ -31,24 +39,31 @@ class DirectLiNGAM:
     prune_method: str = "ols"
     prune_threshold: float = 0.0
     prune_kwargs: dict = dataclasses.field(default_factory=dict)
+    compaction: str = "none"
 
     causal_order_: Optional[np.ndarray] = None
     adjacency_: Optional[np.ndarray] = None
+    resid_var_: Optional[np.ndarray] = None
+    result_: Optional[api.FitResult] = None
+
+    def to_config(self) -> api.FitConfig:
+        """The static FitConfig equivalent of this facade's settings."""
+        return api.FitConfig(
+            backend=self.backend,
+            interpret=self.interpret,
+            prune_method=self.prune_method,
+            prune_threshold=self.prune_threshold,
+            prune_kwargs=dict(self.prune_kwargs),
+            compaction=self.compaction,
+        )
 
     def fit(self, x) -> "DirectLiNGAM":
         x = jnp.asarray(x, dtype=jnp.float32)
-        order = ordering.causal_order(
-            x, backend=self.backend, interpret=self.interpret
-        )
-        b = pruning.estimate_adjacency(
-            x,
-            order,
-            method=self.prune_method,
-            threshold=self.prune_threshold,
-            **self.prune_kwargs,
-        )
-        self.causal_order_ = np.asarray(order)
-        self.adjacency_ = np.asarray(b)
+        result = api.fit_fn(x, self.to_config())
+        self.result_ = result
+        self.causal_order_ = np.asarray(result.order)
+        self.adjacency_ = np.asarray(result.adjacency)
+        self.resid_var_ = np.asarray(result.resid_var)
         return self
 
 

@@ -90,17 +90,8 @@ def _ordering_step(x, active, *, backend, interpret):
     return x_new, active_new, root
 
 
-@functools.partial(
-    jax.jit, static_argnames=("backend", "interpret", "unroll")
-)
-def causal_order(x, *, backend="blocked", interpret=True, unroll=False):
-    """Full causal ordering of all d variables.
-
-    Returns ``order`` (d,) int32 — order[p] is the variable at causal
-    position p (order[0] = most exogenous).
-    """
-    m, d = x.shape
-    x = x.astype(jnp.float32)
+def _scan_body(backend, interpret):
+    """Shared ``lax.scan`` body: one ordering step, emits the chosen root."""
 
     def body(carry, _):
         xc, act = carry
@@ -109,6 +100,15 @@ def causal_order(x, *, backend="blocked", interpret=True, unroll=False):
         )
         return (xc, act), root
 
+    return body
+
+
+def _causal_order_impl(x, *, backend="blocked", interpret=True, unroll=False):
+    """Unjitted trace body of :func:`causal_order` (composable under
+    ``jit``/``vmap`` by callers that build larger traced programs)."""
+    m, d = x.shape
+    x = x.astype(jnp.float32)
+    body = _scan_body(backend, interpret)
     init = (x, jnp.ones((d,), dtype=bool))
     if unroll:
         order = []
@@ -122,20 +122,100 @@ def causal_order(x, *, backend="blocked", interpret=True, unroll=False):
 
 
 @functools.partial(
+    jax.jit, static_argnames=("backend", "interpret", "unroll")
+)
+def causal_order(x, *, backend="blocked", interpret=True, unroll=False):
+    """Full causal ordering of all d variables.
+
+    Returns ``order`` (d,) int32 — order[p] is the variable at causal
+    position p (order[0] = most exogenous).
+    """
+    return _causal_order_impl(
+        x, backend=backend, interpret=interpret, unroll=unroll
+    )
+
+
+def _stage_schedule(d: int, frac: float = 0.25, min_stage: int = 8):
+    """Static compaction schedule: [(width, n_steps), ...], sum n = d.
+
+    Each stage runs ``n_steps`` ordering steps at physical width ``width``
+    and then gathers the surviving columns into a ``width - n_steps``
+    buffer. Smaller ``frac`` compacts more aggressively: total pair work
+    approaches the sequential algorithm's d^3/3 instead of the masked
+    scan's d^3 (frac=0.25 => ~0.43 d^3, a ~2.3x FLOP cut).
+    """
+    if not 0.0 < frac <= 1.0:
+        raise ValueError(f"compaction frac must be in (0, 1], got {frac}")
+    if min_stage < 1:
+        raise ValueError(f"min_stage must be >= 1, got {min_stage}")
+    sched = []
+    d_cur = d
+    while d_cur > min_stage:
+        n = max(1, int(round(d_cur * frac)))
+        sched.append((d_cur, n))
+        d_cur -= n
+    if d_cur:
+        sched.append((d_cur, d_cur))
+    return tuple(sched)
+
+
+def _causal_order_compact_impl(
+    x, *, backend="blocked", interpret=True, frac=0.25, min_stage=8
+):
+    """In-trace staged compaction: one traced program, static stage shapes.
+
+    Unlike :func:`causal_order_staged` (host-driven, one re-jit per
+    stage), the whole schedule here is unrolled inside a single trace —
+    every stage has a static width, so the function compiles exactly once
+    and composes with ``vmap`` (the batched bootstrap engine relies on
+    this: each batch element compacts along its *own* surviving columns
+    via a batched gather). Active-column arithmetic is identical to the
+    full masked scan — inactive columns never influence active ones — so
+    the returned order matches :func:`causal_order` exactly.
+    """
+    d = x.shape[1]
+    x = x.astype(jnp.float32)
+    labels = jnp.arange(d, dtype=jnp.int32)  # current column -> original
+    parts = []
+    body = _scan_body(backend, interpret)
+    for width, n_steps in _stage_schedule(d, frac, min_stage):
+        active = jnp.ones((width,), dtype=bool)
+        (x, active), roots = jax.lax.scan(
+            body, (x, active), None, length=n_steps
+        )
+        parts.append(labels[roots])
+        keep = width - n_steps
+        if keep:
+            # Surviving column indices in ascending order (stable under
+            # vmap: distinct keys, inactive pushed past the end).
+            idx = jnp.argsort(jnp.where(active, jnp.arange(width), width))
+            idx = idx[:keep]
+            x = jnp.take(x, idx, axis=1)
+            labels = labels[idx]
+    return jnp.concatenate(parts).astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("backend", "interpret", "frac", "min_stage"),
+)
+def causal_order_compact(
+    x, *, backend="blocked", interpret=True, frac=0.25, min_stage=8
+):
+    """Single-compile staged-compaction ordering (see impl docstring)."""
+    return _causal_order_compact_impl(
+        x, backend=backend, interpret=interpret, frac=frac,
+        min_stage=min_stage,
+    )
+
+
+@functools.partial(
     jax.jit, static_argnames=("n_steps", "backend", "interpret")
 )
 def _partial_order(x, active, n_steps, *, backend, interpret):
     """Run ``n_steps`` ordering steps; return (roots, x, active)."""
-
-    def body(carry, _):
-        xc, act = carry
-        xc, act, root = _ordering_step(
-            xc, act, backend=backend, interpret=interpret
-        )
-        return (xc, act), root
-
     (x, active), roots = jax.lax.scan(
-        body, (x, active), None, length=n_steps
+        _scan_body(backend, interpret), (x, active), None, length=n_steps
     )
     return roots.astype(jnp.int32), x, active
 

@@ -9,7 +9,9 @@ Procedure (paper §3.2):
   3. Transform the lagged coefficients: theta_tau = (I - B0) @ M_tau.
 
 The VAR estimation is a single batched lstsq on TPU (the paper uses
-statsmodels on CPU for this step).
+statsmodels on CPU for this step). Step 2 routes through the functional
+core (``api.fit_fn``) — the facade only orchestrates the VAR regression
+and the coefficient transform around the pure fit.
 """
 
 from __future__ import annotations
@@ -20,7 +22,7 @@ from typing import List, Optional
 import jax.numpy as jnp
 import numpy as np
 
-from .direct_lingam import DirectLiNGAM
+from . import api
 
 
 def estimate_var(x, lags: int = 1):
@@ -52,21 +54,26 @@ class VarLiNGAM:
     adjacency_matrices_: Optional[List[np.ndarray]] = None  # [theta_0..k]
     var_coefs_: Optional[np.ndarray] = None
     residuals_: Optional[np.ndarray] = None
+    result_: Optional[api.FitResult] = None
 
-    def fit(self, x) -> "VarLiNGAM":
-        mats, _, resid = estimate_var(x, self.lags)
-        dl = DirectLiNGAM(
+    def to_config(self) -> api.FitConfig:
+        return api.FitConfig(
             backend=self.backend,
             interpret=self.interpret,
             prune_method=self.prune_method,
             prune_threshold=self.prune_threshold,
-        ).fit(resid)
-        b0 = jnp.asarray(dl.adjacency_)
+        )
+
+    def fit(self, x) -> "VarLiNGAM":
+        mats, _, resid = estimate_var(x, self.lags)
+        result = api.fit_fn(resid, self.to_config())
+        b0 = result.adjacency
         eye = jnp.eye(b0.shape[0], dtype=b0.dtype)
         thetas = [np.asarray(b0)] + [
             np.asarray((eye - b0) @ mats[tau]) for tau in range(self.lags)
         ]
-        self.causal_order_ = dl.causal_order_
+        self.result_ = result
+        self.causal_order_ = np.asarray(result.order)
         self.adjacency_matrices_ = thetas
         self.var_coefs_ = np.asarray(mats)
         self.residuals_ = np.asarray(resid)

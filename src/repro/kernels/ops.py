@@ -70,7 +70,20 @@ def pairwise_moments(
     interpret: bool = True,
     block: int = 64,
 ):
-    """Dispatching wrapper. x_std: (m, d) standardized; c: (d, d)."""
+    """Dispatching wrapper. x_std: (m, d) standardized; c: (d, d).
+
+    Also accepts a leading batch axis — x_std: (b, m, d), c: (b, d, d) —
+    and vmaps the selected backend over it, for callers batching at the
+    kernel level rather than over whole fits. (The bootstrap/ensemble
+    engine in ``repro.core.batched`` vmaps entire fits instead, so its
+    traces reach this function with per-element 2-D shapes.)
+    """
+    if x_std.ndim == 3:
+        return jax.vmap(
+            lambda xb, cb: pairwise_moments(
+                xb, cb, backend=backend, interpret=interpret, block=block
+            )
+        )(x_std, c)
     m, d = x_std.shape
     if backend == "ref":
         return ref.pairwise_moments_ref(x_std, c)

@@ -1,8 +1,16 @@
-"""Hypothesis property-based tests on system invariants."""
+"""Hypothesis property-based tests on system invariants.
+
+``hypothesis`` is an *optional* dev dependency (see README / pyproject);
+the whole module is skipped when it is not installed so tier-1 collection
+stays green on minimal environments.
+"""
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import measures
 from repro.core.ordering import ordering_scores
