@@ -3,7 +3,9 @@
   PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
 
 Prints ``name,metric=value,...`` CSV lines per benchmark and writes the
-aggregate JSON to experiments/bench_results.json.
+aggregate JSON to experiments/bench_results.json. The sharded sweep is
+additionally mirrored to ``BENCH_sharded.json`` at the repo root — the
+machine-readable perf-trajectory artifact CI and future sessions diff.
 """
 
 from __future__ import annotations
@@ -22,6 +24,7 @@ from benchmarks import (  # noqa: E402
     bench_gene,
     bench_models,
     bench_notears,
+    bench_sharded,
     bench_speedup,
     bench_stocks,
 )
@@ -34,7 +37,10 @@ BENCHES = {
     "stocks": bench_stocks.run,            # paper Fig. 4 / Table 2
     "models": bench_models.run,            # substrate throughput smoke
     "bootstrap": bench_bootstrap.run,      # loop vs vmap-batched engine
+    "sharded": bench_sharded.run,          # mesh-plan sweep vs 1-dev oracle
 }
+
+_REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
 
 def main() -> None:
@@ -75,6 +81,20 @@ def main() -> None:
     with open(args.out, "w") as f:
         json.dump(results, f, indent=1, default=default)
     print(f"wrote {args.out}")
+
+    if isinstance(results.get("sharded"), list):
+        sharded_out = os.path.join(_REPO_ROOT, "BENCH_sharded.json")
+        with open(sharded_out, "w") as f:
+            json.dump(
+                {
+                    "bench": "sharded",
+                    "quick": not args.full,
+                    "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+                    "rows": results["sharded"],
+                },
+                f, indent=1, default=default,
+            )
+        print(f"wrote {sharded_out}")
 
 
 if __name__ == "__main__":

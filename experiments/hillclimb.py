@@ -262,9 +262,9 @@ def cell_c():
     emit(f"- baseline: {fmt(base_t)}")
 
     emit("")
-    emit("**C1 — active-set compaction** (`causal_order_staged`: halve the "
-         "physical problem every d/2 steps; exact — tests prove identical "
-         "order)")
+    emit("**C1 — active-set compaction** (`causal_order_compact`: shrink "
+         "the physical problem on a static stage schedule; exact — tests "
+         "prove identical order)")
     emit("- Hypothesis: the masked fixed-shape scan pays full d^2*m pair "
          "work all d steps (~m*d^3 total) although the sequential "
          "algorithm's U-set shrinks; compacting at powers of two cuts "
@@ -282,7 +282,7 @@ def cell_c():
     emit("**C1 wall-clock validation (CPU, reduced d=96, m=20000):**")
     import jax.numpy as jnp
 
-    from repro.core.ordering import causal_order, causal_order_staged
+    from repro.core.ordering import causal_order, causal_order_compact
     from repro.data.simulate import simulate_lingam
 
     gt = simulate_lingam(m=20_000, d=96, seed=0)
@@ -292,9 +292,9 @@ def cell_c():
     o_full = causal_order(x)
     o_full.block_until_ready()
     t_full = time.perf_counter() - t0
-    causal_order_staged(x)  # compile stages
+    causal_order_compact(x)  # compile
     t0 = time.perf_counter()
-    o_staged = causal_order_staged(x)
+    o_staged = causal_order_compact(x)
     t_staged = time.perf_counter() - t0
     same = bool(np.array_equal(np.asarray(o_full), np.asarray(o_staged)))
     emit(f"- full {t_full:.2f}s vs staged {t_staged:.2f}s "

@@ -1,4 +1,4 @@
-from .api import FitConfig, FitResult, fit_fn  # noqa: F401
+from .api import FitConfig, FitResult, Partition, fit_fn  # noqa: F401
 from .batched import (  # noqa: F401
     bootstrap_fits,
     fit_many,

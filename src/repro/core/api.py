@@ -1,35 +1,115 @@
 """Functional estimator core: pure, jittable DirectLiNGAM fits.
 
 The stateful ``DirectLiNGAM`` / ``VarLiNGAM`` dataclasses are facades over
-the two types here:
+the types here:
 
   * :class:`FitConfig` — frozen, hashable estimator settings. Passed as a
     *static* argument, so each distinct config compiles its own program.
+  * :class:`Partition` — an optional mesh-partition spec inside the
+    config: mesh axes/sizes, which axes shard the sample dimension, which
+    axis tiles the (i, j) pair space, and the sample chunk size.
   * :class:`FitResult` — a registered pytree (order, adjacency,
     diagnostics) that flows freely through ``jit``/``vmap``/``scan``.
 
 ``fit_fn(x, config)`` is the whole fit — ordering + adjacency +
-diagnostics — as one traced program with no host round-trips, which is
-what makes the batched engine in :mod:`repro.core.batched` possible:
-``vmap(fit_fn)`` over resamples or datasets is a single compile.
+diagnostics — as one traced program with no host round-trips. The config
+selects the execution plan; all three run the *same* ordering step
+(:func:`repro.core.ordering.ordering_step`), differing only in how its
+reductions execute:
+
+  * **local** (``partition=None``) — plain ``jnp`` on one device.
+  * **vmap** — the batched engine (:mod:`repro.core.batched`) maps the
+    local plan over a leading dataset axis: ``vmap(fit_fn)`` over
+    resamples or ensembles is a single compile.
+  * **mesh** (``partition=Partition(...)``) — the fit compiles to a
+    ``shard_map`` program (:mod:`repro.core.sharded`): samples sharded
+    over the data axes (psum reductions), pair rows tiled over the model
+    axis (all_gather), ordering with in-trace staged compaction, then
+    row-sharded pruning — the d >> single-device-VMEM regime.
 
     from repro.core import api
     res = api.fit_fn(x, api.FitConfig(backend="pallas"))
     res.order       # (d,) int32 causal order
     res.adjacency   # (d, d) f32 connection strengths
     res.resid_var   # (d,) f32 residual noise variances
+
+    mesh_cfg = api.FitConfig(
+        compaction="staged",
+        partition=api.Partition(mesh=(("data", 4), ("model", 2))),
+    )
+    res = api.fit_fn(x, mesh_cfg)   # same FitResult, 8 devices
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from . import ordering, pruning
+
+
+@dataclasses.dataclass(frozen=True)
+class Partition:
+    """Static mesh-partition spec for the mesh execution plan.
+
+    ``mesh`` is a tuple of (axis_name, size) pairs, e.g.
+    ``(("data", 4), ("model", 2))`` — the product must not exceed
+    ``jax.device_count()``. ``sample_axes`` shard the sample dimension
+    (psum-reduced); ``pair_axis`` tiles the (i, j) pair rows
+    (all_gathered). ``chunk`` bounds the per-device sample chunk of the
+    moment pass; samples are padded to a multiple of
+    ``n_sample_shards * chunk`` and variables to a multiple of the pair
+    axis size (padded columns enter inactive and are never selected).
+    ``fused_standardize`` folds standardization into the raw-X matmul
+    (§Perf C2: one standardized-slab pass saved per ordering step).
+
+    ``gather_finish`` picks the adjacency/diagnostics tail:
+      * ``True`` (default) — reassemble the dataset on each device and
+        reduce the covariance in a fixed replicated order: bit-exact
+        against the local plan (the parity tests pin this), but peak
+        per-device memory is the full (m, d) slab.
+      * ``False`` — fully sharded finish: covariance psum-reduced over
+        sample shards, residual diagnostics on local rows. Per-device
+        memory stays O(m_local * d + d^2) — the true d >> one-device
+        regime — at ulp-level (reduction-order) agreement instead of
+        bit-exactness.
+    """
+
+    mesh: Tuple[Tuple[str, int], ...] = (("data", 1), ("model", 1))
+    sample_axes: Tuple[str, ...] = ("data",)
+    pair_axis: str = "model"
+    chunk: int = 512
+    fused_standardize: bool = False
+    gather_finish: bool = True
+
+    def __post_init__(self):
+        if isinstance(self.mesh, dict):
+            object.__setattr__(self, "mesh", tuple(self.mesh.items()))
+        else:
+            object.__setattr__(
+                self, "mesh", tuple((str(a), int(s)) for a, s in self.mesh)
+            )
+        if isinstance(self.sample_axes, str):
+            object.__setattr__(self, "sample_axes", (self.sample_axes,))
+        else:
+            object.__setattr__(self, "sample_axes", tuple(self.sample_axes))
+        names = [a for a, _ in self.mesh]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate axis names in mesh {self.mesh}")
+        for ax in (*self.sample_axes, self.pair_axis):
+            if ax not in names:
+                raise ValueError(f"axis {ax!r} not in mesh {self.mesh}")
+        if self.pair_axis in self.sample_axes:
+            # An overlapping spec would psum different pair-row tiles
+            # together (silently wrong moments), never just run slower.
+            raise ValueError(
+                f"pair_axis {self.pair_axis!r} must be disjoint from "
+                f"sample_axes {self.sample_axes}"
+            )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,7 +125,13 @@ class FitConfig:
                        legacy behaviour of ``ordering.causal_order``).
       * ``"staged"`` — in-trace active-set compaction
                        (``ordering.causal_order_compact``): same order,
-                       ~2x fewer FLOPs, still a single compile.
+                       ~2x fewer FLOPs, still a single compile. On a
+                       mesh, stage widths stay multiples of the pair
+                       axis size.
+
+    ``partition`` selects the execution plan: ``None`` for the local
+    (single-device / vmap) plan, a :class:`Partition` for the
+    ``shard_map`` mesh plan.
     """
 
     backend: str = "blocked"
@@ -56,6 +142,7 @@ class FitConfig:
     compaction: str = "none"
     compaction_frac: float = 0.25
     min_stage: int = 8
+    partition: Optional[Partition] = None
 
     def __post_init__(self):
         if isinstance(self.prune_kwargs, dict):
@@ -86,26 +173,31 @@ jax.tree_util.register_dataclass(
 
 
 def _order_for_config(x, config: FitConfig):
+    reducer = ordering.LocalReducer(
+        backend=config.backend, interpret=config.interpret
+    )
     if config.compaction == "none":
-        return ordering._causal_order_impl(
-            x, backend=config.backend, interpret=config.interpret
-        )
+        return ordering.masked_order_impl(x, reducer)
     if config.compaction == "staged":
-        return ordering._causal_order_compact_impl(
+        return ordering.compact_order_impl(
             x,
-            backend=config.backend,
-            interpret=config.interpret,
+            reducer,
             frac=config.compaction_frac,
             min_stage=config.min_stage,
         )
     raise ValueError(f"unknown compaction: {config.compaction}")
 
 
-def fit_impl(x, config: FitConfig) -> FitResult:
-    """Unjitted trace body of :func:`fit_fn` (for callers composing larger
-    programs — ``vmap`` in the batched engine, ``shard_map``, ...)."""
-    x = x.astype(jnp.float32)
-    order = _order_for_config(x, config)
+def finish_fit(x, order, config: FitConfig) -> FitResult:
+    """Adjacency + residual diagnostics given the causal order.
+
+    Shared tail of every plan: the mesh plan runs the sharded ordering
+    and then this exact computation with its OLS row solves tiled over
+    the pair axis via ``pruning.ols_rows`` — identical per-row
+    arithmetic, so the plans' coefficients agree to the ulp-level
+    lowering differences of batched solves (exactly, at the parity
+    cells the tests pin).
+    """
     b = pruning.estimate_adjacency(
         x,
         order,
@@ -119,11 +211,32 @@ def fit_impl(x, config: FitConfig) -> FitResult:
     return FitResult(order=order, adjacency=b, resid_var=resid_var)
 
 
+def fit_impl(x, config: FitConfig) -> FitResult:
+    """Unjitted trace body of the local plan (for callers composing
+    larger programs — ``vmap`` in the batched engine, ...)."""
+    x = x.astype(jnp.float32)
+    order = _order_for_config(x, config)
+    return finish_fit(x, order, config)
+
+
 @functools.partial(jax.jit, static_argnames=("config",))
+def _fit_local(x, config: FitConfig) -> FitResult:
+    return fit_impl(x, config)
+
+
 def fit_fn(x, config: FitConfig = FitConfig()) -> FitResult:
     """Pure DirectLiNGAM fit: (m, d) data + static config -> FitResult.
 
     The entire fit is one traced program (ordering scan, adjacency solve,
     diagnostics); no host transfers occur until the caller reads a leaf.
+    With ``config.partition`` set, the program is a ``shard_map`` over
+    the configured mesh (built from the process's devices) and returns
+    the same ``FitResult`` pytree — bit-identical at the parity cells
+    pinned by ``tests/test_mesh_fit.py``, and agreeing to fp32
+    reduction order (ulps) in general.
     """
-    return fit_impl(x, config)
+    if config.partition is not None:
+        from . import sharded
+
+        return sharded.fit_sharded(x, config)
+    return _fit_local(x, config)

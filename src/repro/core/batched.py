@@ -15,6 +15,13 @@ resamples, ensembles over datasets, scenario sweeps. This module turns
     single jitted call: the resample gather, every ordering scan, every
     adjacency solve, and the edge statistics all live in one XLA program.
 
+This module is the **vmap** execution plan of the shared ordering step
+(:func:`repro.core.ordering.ordering_step`): it maps the local plan's
+reducer over a leading dataset axis — the mesh plan
+(``FitConfig.partition``) is the orthogonal scale-out direction and
+cannot be nested inside ``vmap`` (both would claim the devices), so
+partitioned configs are rejected here with a pointer to ``fit_fn``.
+
 Under ``vmap`` the staged-compaction ordering (``compaction="staged"``)
 still works: each batch element gathers along its *own* surviving
 columns (batched ``take``), so the engine keeps compaction's ~2x FLOP
@@ -31,10 +38,22 @@ import jax.numpy as jnp
 from .api import FitConfig, FitResult, fit_impl
 
 
+def _require_local_plan(config: FitConfig, engine: str) -> None:
+    if config.partition is not None:
+        raise ValueError(
+            f"{engine} vmaps the local execution plan and cannot nest a "
+            "mesh partition; drop config.partition, or fit each dataset "
+            "through api.fit_fn (the mesh plan) / serve the batch via "
+            "CausalDiscoveryEngine, which routes partitioned configs "
+            "per-dataset."
+        )
+
+
 @functools.partial(jax.jit, static_argnames=("config",))
 def fit_many(xs, config: FitConfig = FitConfig()) -> FitResult:
     """Fit every dataset in ``xs`` (b, m, d); returns a batched FitResult
     (order: (b, d), adjacency: (b, d, d), resid_var: (b, d))."""
+    _require_local_plan(config, "fit_many")
     return jax.vmap(lambda x: fit_impl(x, config))(xs)
 
 
@@ -59,5 +78,6 @@ def bootstrap_fits(x, indices, config: FitConfig = FitConfig()) -> FitResult:
       (``bootstrap._summarize``), kept out of this program so threshold
       sweeps reuse the compile cache.
     """
+    _require_local_plan(config, "bootstrap_fits")
     xs = jnp.take(x.astype(jnp.float32), indices, axis=0)  # (b, m, d)
     return jax.vmap(lambda xb: fit_impl(xb, config))(xs)

@@ -40,6 +40,7 @@ class DirectLiNGAM:
     prune_threshold: float = 0.0
     prune_kwargs: dict = dataclasses.field(default_factory=dict)
     compaction: str = "none"
+    partition: Optional[api.Partition] = None
 
     causal_order_: Optional[np.ndarray] = None
     adjacency_: Optional[np.ndarray] = None
@@ -55,6 +56,7 @@ class DirectLiNGAM:
             prune_threshold=self.prune_threshold,
             prune_kwargs=dict(self.prune_kwargs),
             compaction=self.compaction,
+            partition=self.partition,
         )
 
     def fit(self, x) -> "DirectLiNGAM":

@@ -46,17 +46,29 @@ def entropy_from_moments(m_logcosh, m_uexp):
     )
 
 
-def nonlinear_moments(u, axis=-1):
-    """E[log cosh u] and E[u exp(-u^2/2)] along ``axis``.
+def nonlinear_terms(u):
+    """Elementwise ``(log cosh u, u exp(-u^2/2))`` — the two integrands.
 
     ``log cosh`` is computed in the overflow-safe form
-    ``|u| + log1p(exp(-2|u|)) - log 2``.
+    ``|u| + log1p(exp(-2|u|)) - log 2``. Both terms are exactly 0 at
+    ``u = 0``, which the padded/masked reduction paths (blocked row
+    kernel, sharded column moments) rely on: zeroed pad entries
+    contribute nothing to the sums.
+
+    This is the single definition of the moment integrands shared by
+    every execution plan; only the *reductions* over samples differ
+    (plain mean, chunked scan, psum over a mesh).
     """
     au = jnp.abs(u)
     logcosh = au + jnp.log1p(jnp.exp(-2.0 * au)) - jnp.log(2.0)
-    m1 = jnp.mean(logcosh, axis=axis)
-    m2 = jnp.mean(u * jnp.exp(-0.5 * u * u), axis=axis)
-    return m1, m2
+    uexp = u * jnp.exp(-0.5 * u * u)
+    return logcosh, uexp
+
+
+def nonlinear_moments(u, axis=-1):
+    """E[log cosh u] and E[u exp(-u^2/2)] along ``axis``."""
+    logcosh, uexp = nonlinear_terms(u)
+    return jnp.mean(logcosh, axis=axis), jnp.mean(uexp, axis=axis)
 
 
 def entropy(u, axis=-1):

@@ -1,9 +1,8 @@
-"""Causal ordering (Algorithm 1 of the paper) — vectorized, masked, jit-able.
+"""Causal ordering (Algorithm 1 of the paper) — one step, three plans.
 
-The paper parallelizes the pair loop of ``search_causal_order`` on GPU. The
-TPU-native formulation here goes one step further and expresses the *entire*
-ordering loop as a ``lax.scan`` of d identical masked steps over a
-static-shape (m, d) buffer:
+The paper parallelizes the pair loop of ``search_causal_order`` on GPU.
+Here the *entire* ordering loop is a ``lax.scan`` of d identical masked
+steps over a static-shape (m, d) buffer:
 
   step(X, active):
     1. standardize active columns (ddof=0)
@@ -14,29 +13,150 @@ static-shape (m, d) buffer:
                                                      matching np.argmax)
     6. residualize: x_j <- x_j - (cov(x_j, x_root)/var(x_root)) x_root
 
+There is exactly **one** implementation of this step
+(:func:`ordering_step`); what varies between execution plans is only how
+the sample/pair reductions are carried out, abstracted behind a small
+``Reducer`` interface:
+
+  * :class:`LocalReducer` — plain ``jnp`` reductions on one device. This
+    is both the single-device plan and the **vmap** plan: the batched
+    engine (:mod:`repro.core.batched`) maps the very same step over a
+    leading dataset axis.
+  * ``MeshReducer`` (:mod:`repro.core.sharded`) — the **mesh** plan:
+    samples sharded over data axes (``psum`` reductions), the (i, j)
+    pair space tiled over a model axis (row-tile moments +
+    ``all_gather``), run under ``shard_map``.
+
 Inactive columns are masked out of the scores; their data still flows
-through the moment computation (static shapes), which preserves the O(d^2 m)
-per-step cost of the sequential algorithm while making every step identical
-for XLA. Step 6 is the paper's "sequential 4%" — here it is a vectorized
-rank-1 update, so the parallel fraction exceeds the paper's 0.96.
+through the moment computation (static shapes), which preserves the
+O(d^2 m) per-step cost of the sequential algorithm while making every
+step identical for XLA. Step 6 is the paper's "sequential 4%" — here it
+is a vectorized rank-1 update, so the parallel fraction exceeds the
+paper's 0.96.
+
+Both scan drivers (:func:`masked_order_impl`, the full masked scan, and
+:func:`compact_order_impl`, in-trace staged active-set compaction) take
+any reducer, so staged compaction also runs under ``shard_map`` — stage
+widths are static and padded to the reducer's ``col_multiple`` (the pair
+axis size for the mesh plan) with surviving columns gathered per shard.
 """
 
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops
+from repro.kernels.ops import _round_up
 from . import measures
 
 _NEG_INF = jnp.float32(-1e30)
 EPS = 1e-12
 
 
+class LocalReducer:
+    """Single-device reduction plan (also used, vmapped, by the batched
+    engine).
+
+    The Reducer interface every plan implements:
+
+      * ``mean_over_samples(v) -> v.mean(axis=0)`` — the global sample
+        mean (a ``psum`` of local sums on a mesh).
+      * ``gram_mean(v) -> v^T v / m`` — the global Gram-matrix mean (one
+        matmul here; matmul + ``psum`` on a mesh).
+      * ``mask_rows(v)`` — zero rows that are sample padding (identity
+        here; mesh shards carry a zero-padded tail).
+      * ``moment_rows(x_std, c) -> (m1_rows, m2_rows)`` — pairwise
+        residual moment *means* for this plan's row tile of the (i, j)
+        pair space (the whole of it here; one model-axis tile on a mesh).
+      * ``gather_rows(rows) -> (d, d)`` — assemble full moment matrices
+        from the row tiles (identity here; ``all_gather`` on a mesh).
+      * ``col_moments(x_std) -> (cm1, cm2)`` — per-column nonlinear
+        moments for the H(x_i) entropies.
+      * ``standardize(x) -> (x_std, c, mu, var)`` — delegates to the
+        shared :func:`step_standardize` (a plan may override it to fuse
+        the correlation into the raw-X matmul, cf.
+        ``fused_standardize``).
+      * ``col_multiple`` — physical column widths must be multiples of
+        this (1 here; the pair-axis size on a mesh), honoured by the
+        staged-compaction driver when it shrinks the buffer.
+    """
+
+    col_multiple = 1
+
+    def __init__(self, backend: str = "blocked", interpret: bool = True):
+        self.backend = backend
+        self.interpret = interpret
+
+    def mean_over_samples(self, v):
+        return jnp.mean(v, axis=0)
+
+    def gram_mean(self, v):
+        return (v.T @ v) / v.shape[0]
+
+    def mask_rows(self, v):
+        return v
+
+    def standardize(self, x):
+        return step_standardize(x, self)
+
+    def moment_rows(self, x_std, c):
+        return ops.pairwise_moments(
+            x_std, c, backend=self.backend, interpret=self.interpret
+        )
+
+    def gather_rows(self, rows):
+        return rows
+
+    def col_moments(self, x_std):
+        return measures.nonlinear_moments(x_std, axis=0)
+
+
+def step_standardize(x, reducer):
+    """Shared ddof=0 standardization + correlation of the working data.
+
+    Two-pass variance (E[(x - mu)^2], one extra reduction round per step
+    on a mesh): the one-pass E[x^2] - mu^2 form catastrophically cancels
+    in fp32 when column means dwarf the stds (raw prices, sensor
+    offsets), which would corrupt the ordering on un-centered data.
+    Padded sample rows (mesh) are re-zeroed *after* centering so they
+    stay out of every downstream moment. Returns (x_std, c, mu, var) —
+    the residual update reuses mu and var instead of re-reducing.
+    """
+    mu = reducer.mean_over_samples(x)
+    xc = reducer.mask_rows(x - mu[None, :])
+    var = jnp.maximum(reducer.mean_over_samples(xc * xc), EPS)
+    rstd = jax.lax.rsqrt(var)
+    x_std = xc * rstd[None, :]
+    c = reducer.gram_mean(x_std)
+    return x_std, c, mu, var
+
+
+def step_scores(cm1, cm2, m1, m2, active):
+    """k_list scores from the column / pairwise nonlinear moments.
+
+    The single definition of the DirectLiNGAM score formula — every plan
+    (local, vmap, mesh) feeds its reduced moments through this.
+    Returns scores with -inf at inactive entries.
+    """
+    h_col = measures.entropy_from_moments(cm1, cm2)  # (d,)
+    h_res = measures.entropy_from_moments(m1, m2)  # (d, d), [i, j]
+
+    # diff_mi[i, j] = (H(x_j) + H(r_i<-j)) - (H(x_i) + H(r_j<-i))
+    diff = (h_col[None, :] + h_res) - (h_col[:, None] + h_res.T)
+
+    pair_ok = active[:, None] & active[None, :]
+    pair_ok &= ~jnp.eye(active.shape[0], dtype=bool)
+    contrib = jnp.where(pair_ok, jnp.minimum(0.0, diff) ** 2, 0.0)
+    k_list = -jnp.sum(contrib, axis=1)
+    return jnp.where(active, k_list, _NEG_INF)
+
+
 def ordering_scores(x, active, *, backend="blocked", interpret=True):
-    """k_list scores for one ordering step.
+    """k_list scores for one ordering step (local plan).
 
     Args:
       x:      (m, d) current (partially residualized) data.
@@ -45,71 +165,77 @@ def ordering_scores(x, active, *, backend="blocked", interpret=True):
       (k_list, x_std, c): scores with -inf at inactive entries; the
       standardized data and correlation (reused by the residual update).
     """
-    m, d = x.shape
-    x_std = ops.standardize(x)
-    c = ops.correlation(x_std)
-    m1, m2 = ops.pairwise_moments(
-        x_std, c, backend=backend, interpret=interpret
-    )
-
-    # Column entropies H(x_i).
-    cm1, cm2 = measures.nonlinear_moments(x_std, axis=0)
-    h_col = measures.entropy_from_moments(cm1, cm2)  # (d,)
-
-    # Residual entropies H(r_{i<-j}/std).
-    h_res = measures.entropy_from_moments(m1, m2)  # (d, d), [i, j]
-
-    # diff_mi[i, j] = (H(x_j) + H(r_i<-j)) - (H(x_i) + H(r_j<-i))
-    diff = (h_col[None, :] + h_res) - (h_col[:, None] + h_res.T)
-
-    pair_ok = active[:, None] & active[None, :]
-    pair_ok &= ~jnp.eye(d, dtype=bool)
-    contrib = jnp.where(pair_ok, jnp.minimum(0.0, diff) ** 2, 0.0)
-    k_list = -jnp.sum(contrib, axis=1)
-    k_list = jnp.where(active, k_list, _NEG_INF)
-    return k_list, x_std, c
+    reducer = LocalReducer(backend=backend, interpret=interpret)
+    x_std, c, _, _ = reducer.standardize(x)
+    m1, m2 = reducer.moment_rows(x_std, c)
+    cm1, cm2 = reducer.col_moments(x_std)
+    return step_scores(cm1, cm2, m1, m2, active), x_std, c
 
 
-def _ordering_step(x, active, *, backend, interpret):
-    k_list, _, _ = ordering_scores(
-        x, active, backend=backend, interpret=interpret
-    )
+def ordering_step(x, active, reducer):
+    """One masked ordering step — the shared implementation.
+
+    Args:
+      x:       (m_plan, width) working data (the plan's local sample
+               rows; full columns).
+      active:  (width,) bool mask of variables still to be ordered.
+      reducer: the plan's Reducer (see :class:`LocalReducer`).
+    Returns:
+      (x_new, active_new, root): residualized data, updated mask, and
+      the physical column index chosen this step.
+    """
+    x_std, c, mu, var = reducer.standardize(x)
+    rows1, rows2 = reducer.moment_rows(x_std, c)
+    m1 = reducer.gather_rows(rows1)
+    m2 = reducer.gather_rows(rows2)
+    cm1, cm2 = reducer.col_moments(x_std)
+    k_list = step_scores(cm1, cm2, m1, m2, active)
     root = jnp.argmax(k_list)
 
     # Residualize every other active column on the root column of the
     # *unstandardized* working data (matches the sequential reference).
+    # mu/var come from standardize — no extra sample reduction (on a
+    # mesh: no extra psum round) for the root's moments. The covariance
+    # is two-pass (centered product) for the same fp32-cancellation
+    # reason as step_standardize; pad rows are masked after centering.
     xr = x[:, root]
-    var_r = jnp.maximum(jnp.var(xr), EPS)
-    mean_r = jnp.mean(xr)
-    cov = jnp.mean(x * xr[:, None], axis=0) - jnp.mean(x, axis=0) * mean_r
-    coef = cov / var_r  # (d,)
+    mean_r = mu[root]
+    var_r = var[root]
+    cov = reducer.mean_over_samples(
+        reducer.mask_rows((x - mu[None, :]) * (xr - mean_r)[:, None])
+    )
+    coef = cov / var_r  # (width,)
     update = jnp.where(active & (jnp.arange(x.shape[1]) != root), coef, 0.0)
     x_new = x - xr[:, None] * update[None, :]
 
-    active_new = active.at[root].set(False)
-    return x_new, active_new, root
+    return x_new, active.at[root].set(False), root
 
 
-def _scan_body(backend, interpret):
+def _scan_body(reducer):
     """Shared ``lax.scan`` body: one ordering step, emits the chosen root."""
 
     def body(carry, _):
         xc, act = carry
-        xc, act, root = _ordering_step(
-            xc, act, backend=backend, interpret=interpret
-        )
+        xc, act, root = ordering_step(xc, act, reducer)
         return (xc, act), root
 
     return body
 
 
-def _causal_order_impl(x, *, backend="blocked", interpret=True, unroll=False):
-    """Unjitted trace body of :func:`causal_order` (composable under
-    ``jit``/``vmap`` by callers that build larger traced programs)."""
-    m, d = x.shape
+def masked_order_impl(x, reducer, *, d=None, unroll=False):
+    """Full masked scan: d identical steps at constant physical width.
+
+    ``d`` is the number of real variables; columns at index >= d (mesh
+    padding) start inactive and are never selected. Composable under
+    ``jit`` / ``vmap`` / ``shard_map`` by callers building larger traced
+    programs.
+    """
+    width = x.shape[1]
+    if d is None:
+        d = width
     x = x.astype(jnp.float32)
-    body = _scan_body(backend, interpret)
-    init = (x, jnp.ones((d,), dtype=bool))
+    body = _scan_body(reducer)
+    init = (x, jnp.arange(width) < d)
     if unroll:
         order = []
         carry = init
@@ -125,20 +251,20 @@ def _causal_order_impl(x, *, backend="blocked", interpret=True, unroll=False):
     jax.jit, static_argnames=("backend", "interpret", "unroll")
 )
 def causal_order(x, *, backend="blocked", interpret=True, unroll=False):
-    """Full causal ordering of all d variables.
+    """Full causal ordering of all d variables (local plan).
 
     Returns ``order`` (d,) int32 — order[p] is the variable at causal
     position p (order[0] = most exogenous).
     """
-    return _causal_order_impl(
-        x, backend=backend, interpret=interpret, unroll=unroll
+    return masked_order_impl(
+        x, LocalReducer(backend=backend, interpret=interpret), unroll=unroll
     )
 
 
 def _stage_schedule(d: int, frac: float = 0.25, min_stage: int = 8):
     """Static compaction schedule: [(width, n_steps), ...], sum n = d.
 
-    Each stage runs ``n_steps`` ordering steps at physical width ``width``
+    Each stage runs ``n_steps`` ordering steps at logical width ``width``
     and then gathers the surviving columns into a ``width - n_steps``
     buffer. Smaller ``frac`` compacts more aggressively: total pair work
     approaches the sequential algorithm's d^3/3 instead of the masked
@@ -159,39 +285,50 @@ def _stage_schedule(d: int, frac: float = 0.25, min_stage: int = 8):
     return tuple(sched)
 
 
-def _causal_order_compact_impl(
-    x, *, backend="blocked", interpret=True, frac=0.25, min_stage=8
-):
+def compact_order_impl(x, reducer, *, d=None, frac=0.25, min_stage=8):
     """In-trace staged compaction: one traced program, static stage shapes.
 
-    Unlike :func:`causal_order_staged` (host-driven, one re-jit per
-    stage), the whole schedule here is unrolled inside a single trace —
-    every stage has a static width, so the function compiles exactly once
-    and composes with ``vmap`` (the batched bootstrap engine relies on
-    this: each batch element compacts along its *own* surviving columns
-    via a batched gather). Active-column arithmetic is identical to the
+    The whole schedule is unrolled inside a single trace — every stage
+    has a static width, so the function compiles exactly once and
+    composes with ``vmap`` (each batch element compacts along its *own*
+    surviving columns via a batched gather) and with ``shard_map``
+    (columns are replicated across sample shards, so every shard gathers
+    the same survivors; widths stay multiples of
+    ``reducer.col_multiple``, i.e. the pair-axis size, with freed slots
+    zeroed and inactive). Active-column arithmetic is identical to the
     full masked scan — inactive columns never influence active ones — so
-    the returned order matches :func:`causal_order` exactly.
+    the returned order matches :func:`masked_order_impl` exactly.
     """
-    d = x.shape[1]
+    width = x.shape[1]
+    if d is None:
+        d = width
     x = x.astype(jnp.float32)
-    labels = jnp.arange(d, dtype=jnp.int32)  # current column -> original
+    col_multiple = reducer.col_multiple
+    labels = jnp.arange(width, dtype=jnp.int32)  # current column -> original
+    active = jnp.arange(width) < d
     parts = []
-    body = _scan_body(backend, interpret)
-    for width, n_steps in _stage_schedule(d, frac, min_stage):
-        active = jnp.ones((width,), dtype=bool)
+    body = _scan_body(reducer)
+    for w_logical, n_steps in _stage_schedule(d, frac, min_stage):
         (x, active), roots = jax.lax.scan(
             body, (x, active), None, length=n_steps
         )
         parts.append(labels[roots])
-        keep = width - n_steps
+        keep = w_logical - n_steps
         if keep:
+            keep_pad = _round_up(keep, col_multiple)
             # Surviving column indices in ascending order (stable under
             # vmap: distinct keys, inactive pushed past the end).
             idx = jnp.argsort(jnp.where(active, jnp.arange(width), width))
-            idx = idx[:keep]
+            idx = idx[:keep_pad]
             x = jnp.take(x, idx, axis=1)
             labels = labels[idx]
+            if keep_pad != keep:
+                colmask = jnp.arange(keep_pad) < keep
+                x = jnp.where(colmask[None, :], x, 0.0)
+                active = colmask
+            else:
+                active = jnp.ones((keep,), dtype=bool)
+            width = keep_pad
     return jnp.concatenate(parts).astype(jnp.int32)
 
 
@@ -203,57 +340,29 @@ def causal_order_compact(
     x, *, backend="blocked", interpret=True, frac=0.25, min_stage=8
 ):
     """Single-compile staged-compaction ordering (see impl docstring)."""
-    return _causal_order_compact_impl(
-        x, backend=backend, interpret=interpret, frac=frac,
-        min_stage=min_stage,
+    return compact_order_impl(
+        x, LocalReducer(backend=backend, interpret=interpret),
+        frac=frac, min_stage=min_stage,
     )
-
-
-@functools.partial(
-    jax.jit, static_argnames=("n_steps", "backend", "interpret")
-)
-def _partial_order(x, active, n_steps, *, backend, interpret):
-    """Run ``n_steps`` ordering steps; return (roots, x, active)."""
-    (x, active), roots = jax.lax.scan(
-        _scan_body(backend, interpret), (x, active), None, length=n_steps
-    )
-    return roots.astype(jnp.int32), x, active
 
 
 def causal_order_staged(
     x, *, backend="blocked", interpret=True, min_stage=32
 ):
-    """Causal ordering with active-set compaction (§Perf optimization).
+    """Deprecated alias of :func:`causal_order_compact`.
 
-    The masked scan in :func:`causal_order` pays the full d^2*m pair cost
-    at every one of its d steps even though only the active set matters —
-    total ~ m*d^3. This variant halves the *physical* problem every d/2
-    steps by gathering the still-active columns into a smaller buffer
-    (host-driven re-jit per stage, exact same algorithm => identical
-    order), cutting total pair work to ~ m*d^3 * 4/7 (1.75x fewer FLOPs).
-    The sequential CPU implementation gets this for free (its U set
-    shrinks); this recovers it for the fixed-shape TPU formulation.
+    The original host-driven staging (one re-jit per stage) is
+    superseded by the in-trace compaction, which returns the identical
+    order from a single compile and composes with ``vmap`` /
+    ``shard_map``. This shim remains for one release cycle.
     """
-    import numpy as np
-
-    x = jnp.asarray(x, jnp.float32)
-    d = x.shape[1]
-    remaining = np.arange(d)
-    order = []
-    active = jnp.ones((d,), dtype=bool)
-    while len(remaining) > min_stage:
-        d_cur = int(x.shape[1])
-        n_steps = d_cur - d_cur // 2
-        roots, x, active = _partial_order(
-            x, active, n_steps, backend=backend, interpret=interpret
-        )
-        roots = np.asarray(roots)
-        order.extend(remaining[roots].tolist())
-        keep = np.asarray(~np.isin(np.arange(d_cur), roots)).nonzero()[0]
-        x = x[:, keep]
-        remaining = remaining[keep]
-        active = jnp.ones((len(keep),), dtype=bool)
-    if len(remaining):
-        tail = causal_order(x, backend=backend, interpret=interpret)
-        order.extend(remaining[np.asarray(tail)].tolist())
-    return jnp.asarray(order, dtype=jnp.int32)
+    warnings.warn(
+        "causal_order_staged is deprecated; use causal_order_compact "
+        "(in-trace staged compaction, single compile, identical order).",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    return causal_order_compact(
+        x, backend=backend, interpret=interpret,
+        min_stage=max(int(min_stage), 1),
+    )

@@ -6,6 +6,12 @@ this on CPU (numpy/sklearn, ~4% of runtime); here it is vectorized as a
 masked *batched* OLS (one vmapped linear solve per variable) plus an
 optional adaptive-lasso refinement (FISTA on the weighted-L1 problem, the
 jax-native equivalent of lingam's LassoLarsIC step).
+
+The per-variable solves are row-independent given the (replicated)
+covariance, so the mesh execution plan (:mod:`repro.core.sharded`) calls
+the row-tile entry points (:func:`ols_rows`, :func:`lasso_rows`) on its
+pair-axis tile and ``all_gather``s the rows — bit-identical to the
+single-device solve because each row's computation is unchanged.
 """
 
 from __future__ import annotations
@@ -18,11 +24,35 @@ import jax.numpy as jnp
 EPS = 1e-9
 
 
-def _pred_mask(order):
+def pred_mask(order):
     """(d, d) bool: mask[i, j] = True iff j precedes i in the causal order."""
     d = order.shape[0]
     pos = jnp.zeros((d,), jnp.int32).at[order].set(jnp.arange(d, dtype=jnp.int32))
     return pos[None, :] < pos[:, None]
+
+
+_pred_mask = pred_mask  # backwards-compatible private alias
+
+
+def ols_rows(cov, mask_rows, cov_rows):
+    """Masked OLS solves for a tile of variables.
+
+    Args:
+      cov:       (d, d) covariance of the centered data (replicated).
+      mask_rows: (tile, d) predecessor masks for the tile's variables.
+      cov_rows:  (tile, d) the same variables' covariance rows.
+    Returns:
+      (tile, d) coefficient rows. Rows whose mask is all-False (e.g.
+      mesh padding rows) solve an identity system and come back zero.
+    """
+
+    def solve_one(mask_i, cov_xi):
+        mm = mask_i[:, None] & mask_i[None, :]
+        a = jnp.where(mm, cov, 0.0) + jnp.diag(jnp.where(mask_i, EPS, 1.0))
+        b = jnp.where(mask_i, cov_xi, 0.0)
+        return jnp.linalg.solve(a, b)
+
+    return jax.vmap(solve_one)(mask_rows, cov_rows)
 
 
 @functools.partial(jax.jit, static_argnames=())
@@ -35,44 +65,26 @@ def ols_adjacency(x, order):
     m, d = x.shape
     xc = x - jnp.mean(x, axis=0, keepdims=True)
     cov = (xc.T @ xc) / m  # (d, d)
-    mask = _pred_mask(order)  # (d, d)
-
-    def solve_one(mask_i, cov_xi):
-        mm = mask_i[:, None] & mask_i[None, :]
-        a = jnp.where(mm, cov, 0.0) + jnp.diag(jnp.where(mask_i, EPS, 1.0))
-        b = jnp.where(mask_i, cov_xi, 0.0)
-        return jnp.linalg.solve(a, b)
-
-    return jax.vmap(solve_one)(mask, cov)
+    mask = pred_mask(order)  # (d, d)
+    return ols_rows(cov, mask, cov)
 
 
 def _soft_threshold(z, t):
     return jnp.sign(z) * jnp.maximum(jnp.abs(z) - t, 0.0)
 
 
-@functools.partial(jax.jit, static_argnames=("n_steps",))
-def adaptive_lasso_adjacency(x, order, lam=0.01, gamma=1.0, n_steps=400):
-    """Adaptive lasso via FISTA, weights w_j = 1/|b_ols_j|^gamma.
+def lasso_rows(cov, mask_rows, cov_rows, w_rows, lam, lip, n_steps):
+    """FISTA adaptive-lasso solves for a tile of variables.
 
-    Solved in *standardized* units (correlation matrix) so ``lam`` is
-    dimensionless and the quadratic is well conditioned (L <= d); the
-    coefficients are rescaled back to raw units at the end. Per variable i
-    (vectorized over i):
-        min_b 0.5 b^T R b - r_i^T b + lam * sum_j w_j |b_j|
-    Predecessors enter through masks so shapes stay static.
+    Args:
+      cov:       (d, d) correlation of the standardized data (replicated).
+      mask_rows: (tile, d) predecessor masks.
+      cov_rows:  (tile, d) correlation rows of the tile's variables.
+      w_rows:    (tile, d) adaptive weights 1/|b_ols|^gamma.
+    Returns:
+      (tile, d) standardized-unit coefficient rows.
     """
-    m, d = x.shape
-    sd = jnp.maximum(jnp.std(x, axis=0), 1e-12)
-    xc = (x - jnp.mean(x, axis=0, keepdims=True)) / sd
-    cov = (xc.T @ xc) / m  # correlation
-    mask = _pred_mask(order)  # (d, d) bool
-    # OLS weights in standardized units.
-    b_ols_raw = ols_adjacency(x, order)
-    b_ols = b_ols_raw * (sd[None, :] / sd[:, None])
-    w = 1.0 / jnp.maximum(jnp.abs(b_ols), 1e-3) ** gamma  # (d, d)
-
-    # Lipschitz bound: trace of the correlation matrix = d (cheap, safe).
-    lip = jnp.float32(d)
+    d = cov.shape[0]
 
     def fista(mask_i, cov_xi, w_i):
         mm = mask_i[:, None] & mask_i[None, :]
@@ -94,8 +106,42 @@ def adaptive_lasso_adjacency(x, order, lam=0.01, gamma=1.0, n_steps=400):
         )
         return b
 
-    b_std = jax.vmap(fista)(mask, cov, w)
+    return jax.vmap(fista)(mask_rows, cov_rows, w_rows)
+
+
+@functools.partial(jax.jit, static_argnames=("n_steps",))
+def adaptive_lasso_adjacency(x, order, lam=0.01, gamma=1.0, n_steps=400):
+    """Adaptive lasso via FISTA, weights w_j = 1/|b_ols_j|^gamma.
+
+    Solved in *standardized* units (correlation matrix) so ``lam`` is
+    dimensionless and the quadratic is well conditioned (L <= d); the
+    coefficients are rescaled back to raw units at the end. Per variable i
+    (vectorized over i):
+        min_b 0.5 b^T R b - r_i^T b + lam * sum_j w_j |b_j|
+    Predecessors enter through masks so shapes stay static.
+    """
+    m, d = x.shape
+    sd = jnp.maximum(jnp.std(x, axis=0), 1e-12)
+    xc = (x - jnp.mean(x, axis=0, keepdims=True)) / sd
+    cov = (xc.T @ xc) / m  # correlation
+    mask = pred_mask(order)  # (d, d) bool
+    # OLS weights in standardized units.
+    b_ols_raw = ols_adjacency(x, order)
+    b_ols = b_ols_raw * (sd[None, :] / sd[:, None])
+    w = 1.0 / jnp.maximum(jnp.abs(b_ols), 1e-3) ** gamma  # (d, d)
+
+    # Lipschitz bound: trace of the correlation matrix = d (cheap, safe).
+    lip = jnp.float32(d)
+
+    b_std = lasso_rows(cov, mask, cov, w, lam, lip, n_steps)
     return b_std * (sd[:, None] / sd[None, :])
+
+
+def apply_threshold(b, threshold: float):
+    """Zero entries with |B_ij| < threshold (no-op for threshold <= 0)."""
+    if threshold > 0.0:
+        b = jnp.where(jnp.abs(b) >= threshold, b, 0.0)
+    return b
 
 
 def estimate_adjacency(
@@ -108,6 +154,4 @@ def estimate_adjacency(
         b = adaptive_lasso_adjacency(x, order, **kw)
     else:
         raise ValueError(f"unknown method: {method}")
-    if threshold > 0.0:
-        b = jnp.where(jnp.abs(b) >= threshold, b, 0.0)
-    return b
+    return apply_threshold(b, threshold)

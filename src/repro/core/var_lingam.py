@@ -11,7 +11,11 @@ Procedure (paper §3.2):
 The VAR estimation is a single batched lstsq on TPU (the paper uses
 statsmodels on CPU for this step). Step 2 routes through the functional
 core (``api.fit_fn``) — the facade only orchestrates the VAR regression
-and the coefficient transform around the pure fit.
+and the coefficient transform around the pure fit. Setting ``partition``
+runs that residual ordering on the mesh plan (``shard_map`` over the
+configured device mesh) — with ``Partition(gather_finish=False)`` the
+whole fit stays sharded end to end, which is how VarLiNGAM scales past
+one device's memory on wide panels (the Jiao et al. scaling regime).
 """
 
 from __future__ import annotations
@@ -49,6 +53,8 @@ class VarLiNGAM:
     interpret: bool = True
     prune_method: str = "ols"
     prune_threshold: float = 0.0
+    compaction: str = "none"
+    partition: Optional[api.Partition] = None
 
     causal_order_: Optional[np.ndarray] = None
     adjacency_matrices_: Optional[List[np.ndarray]] = None  # [theta_0..k]
@@ -62,6 +68,8 @@ class VarLiNGAM:
             interpret=self.interpret,
             prune_method=self.prune_method,
             prune_threshold=self.prune_threshold,
+            compaction=self.compaction,
+            partition=self.partition,
         )
 
     def fit(self, x) -> "VarLiNGAM":

@@ -29,6 +29,18 @@ def _round_up(x: int, k: int) -> int:
     return ((x + k - 1) // k) * k
 
 
+def _nonlinear_terms(u):
+    """Elementwise ``(log cosh u, u exp(-u^2/2))`` moment integrands.
+
+    Kernel-local copy of ``repro.core.measures.nonlinear_terms`` — the
+    kernels package stays free of core imports. Both terms are 0 at
+    ``u = 0``, which the masked/padded reductions below rely on.
+    """
+    au = jnp.abs(u)
+    logcosh = au + jnp.log1p(jnp.exp(-2.0 * au)) - jnp.log(2.0)
+    return logcosh, u * jnp.exp(-0.5 * u * u)
+
+
 def pairwise_moments_blocked(x_std, c, block: int = 64):
     """Row-blocked jnp implementation: O(block * d * m) peak memory.
 
@@ -48,11 +60,9 @@ def pairwise_moments_blocked(x_std, c, block: int = 64):
         ci = jax.lax.dynamic_slice_in_dim(c_pad, idx * block, block, 0)
         inv = jax.lax.dynamic_slice_in_dim(inv_std, idx * block, block, 0)
         r = xi[:, None, :] - ci[:, :, None] * xt[None, :, :]
-        u = r * inv[:, :, None]
-        au = jnp.abs(u)
-        logcosh = au + jnp.log1p(jnp.exp(-2.0 * au)) - jnp.log(2.0)
+        logcosh, uexp = _nonlinear_terms(r * inv[:, :, None])
         m1 = jnp.mean(logcosh, axis=-1)
-        m2 = jnp.mean(u * jnp.exp(-0.5 * u * u), axis=-1)
+        m2 = jnp.mean(uexp, axis=-1)
         return None, (m1, m2)
 
     _, (m1, m2) = jax.lax.scan(body, None, jnp.arange(d_pad // block))
@@ -104,6 +114,82 @@ def pairwise_moments(
         )
         return m1[:d, :d], m2[:d, :d]
     raise ValueError(f"unknown backend: {backend}")
+
+
+def pairwise_moment_sums_rows(
+    x_std,
+    c,
+    row_start,
+    tile: int,
+    *,
+    chunk: int = 512,
+    backend: str = _DEFAULT_BACKEND,
+    interpret: bool = True,
+):
+    """Pairwise residual moment *sums* for the i-row tile
+    ``[row_start, row_start + tile)`` against all columns — the
+    building block of the mesh execution plan.
+
+    Args:
+      x_std: (m_local, d) data standardized by *global* statistics.
+             Rows past the valid sample count must be zeroed — both
+             moment integrands vanish at 0, so zeroed rows contribute
+             nothing to the sums.
+      c:     (d, d) global correlation.
+      row_start: traced scalar start of the row tile (a device's
+             ``axis_index * tile`` under ``shard_map``).
+      tile:  static tile height.
+    Returns:
+      (S1, S2): (tile, d) partial sums over the local sample rows — the
+      caller psums over sample shards and divides by the global count.
+      ``blocked`` scans over sample chunks (pure jnp); ``pallas`` runs
+      the paper's kernel on the local slab (row-tile variant) — the
+      kernel composed with ``shard_map`` is the full multi-pod
+      configuration.
+    """
+    m_local, d = x_std.shape
+    if backend == "pallas":
+        xt_all = x_std.T  # (d, m_local); caller guarantees padding
+        xt_rows = jax.lax.dynamic_slice_in_dim(xt_all, row_start, tile, 0)
+        c_rows = jax.lax.dynamic_slice_in_dim(c, row_start, tile, 0)
+        bi = 8 if tile % 8 == 0 else 1
+        bj = 128 if d % 128 == 0 else (8 if d % 8 == 0 else 1)
+        bm = chunk if m_local % chunk == 0 else m_local
+        return pairwise_stats.pairwise_moment_sums_rows(
+            xt_rows, xt_all, c_rows, m_total=m_local,
+            bi=bi, bj=bj, bm=bm, interpret=interpret,
+        )
+    if backend != "blocked":
+        raise ValueError(f"unknown backend: {backend}")
+    xt = x_std.T  # (d, m_local)
+    c_rows = jax.lax.dynamic_slice_in_dim(c, row_start, tile, 0)  # (tile, d)
+    inv_std = jax.lax.rsqrt(jnp.maximum(1.0 - c_rows * c_rows, ref.EPS))
+
+    m_pad = _round_up(m_local, chunk)
+    xt = jnp.pad(xt, ((0, 0), (0, m_pad - m_local)))
+    n_chunks = m_pad // chunk
+    # Mask the padded tail inside the nonlinearities.
+    base_valid = jnp.arange(m_pad) < m_local
+
+    def body(carry, k):
+        s1, s2 = carry
+        xs = jax.lax.dynamic_slice_in_dim(xt, k * chunk, chunk, 1)  # (d, chunk)
+        xi = jax.lax.dynamic_slice_in_dim(xs, row_start, tile, 0)   # (tile, chunk)
+        valid = jax.lax.dynamic_slice_in_dim(base_valid, k * chunk, chunk, 0)
+        r = xi[:, None, :] - c_rows[:, :, None] * xs[None, :, :]
+        u = jnp.where(valid[None, None, :], r * inv_std[:, :, None], 0.0)
+        logcosh, uexp = _nonlinear_terms(u)
+        logcosh = jnp.where(valid[None, None, :], logcosh, 0.0)
+        s1 = s1 + jnp.sum(logcosh, axis=-1)
+        s2 = s2 + jnp.sum(uexp, axis=-1)
+        return (s1, s2), None
+
+    init = (
+        jnp.zeros((tile, d), jnp.float32),
+        jnp.zeros((tile, d), jnp.float32),
+    )
+    (s1, s2), _ = jax.lax.scan(body, init, jnp.arange(n_chunks))
+    return s1, s2
 
 
 def _pick_blocks(d: int, m: int):

@@ -18,6 +18,18 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def mesh_from_spec(spec):
+    """Build a mesh from a ((axis_name, size), ...) spec.
+
+    The canonical constructor for :class:`repro.core.api.Partition.mesh`
+    specs — e.g. ``(("data", 4), ("model", 2))`` on >= 8 devices. A 1 x 1
+    spec is valid on a single device (the mesh plan's degenerate case).
+    """
+    names = tuple(a for a, _ in spec)
+    sizes = tuple(int(s) for _, s in spec)
+    return jax.make_mesh(sizes, names)
+
+
 def make_debug_mesh(n_data: int = 4, n_model: int = 2, *, pod: int = 0):
     """Small mesh for subprocess integration tests."""
     if pod:

@@ -110,12 +110,20 @@ class FitRequest:
 class CausalDiscoveryEngine:
     """Micro-batched DirectLiNGAM serving over the functional core.
 
-    Requests with the same (m, d) shape share compiled ``fit_many``
-    programs; partial batches are padded (by repeating the first
-    dataset) up to the next power-of-two bucket <= ``batch_size``, so a
-    singleton request costs one fit — not ``batch_size`` fits — while
-    the compile cache stays bounded at log2(batch_size) entries per
-    dataset shape.
+    Requests with the same (m, d) shape share compiled programs. Two
+    regimes, selected by the config's execution plan:
+
+    * **vmap plan** (``config.partition is None``, the default): partial
+      batches are padded (by repeating the first dataset) up to the next
+      power-of-two bucket <= ``batch_size``, so a singleton request
+      costs one fit — not ``batch_size`` fits — while the compile cache
+      stays bounded at log2(batch_size) entries per dataset shape.
+    * **mesh plan** (``config.partition`` set): each dataset is one
+      ``shard_map`` program over the whole device mesh (all devices
+      cooperate on a single fit — the d >> one-device regime), so
+      requests run sequentially; the per-(m, d) shape bucket still
+      reuses the sharded compile cache, which is what keeps mixed
+      traffic from recompiling per request.
     """
 
     def __init__(self, config: Optional[lingam_api.FitConfig] = None,
@@ -129,11 +137,27 @@ class CausalDiscoveryEngine:
             b *= 2
         return min(b, self.batch_size)
 
+    def _run_mesh(self, group: List[FitRequest]) -> None:
+        """Mesh plan: one sharded full-fit program per dataset; the
+        (m, d)-keyed compile cache lives in ``core.sharded``."""
+        for r in group:
+            res = lingam_api.fit_fn(
+                jnp.asarray(np.asarray(r.data, np.float32)), self.config
+            )
+            r.result = lingam_api.FitResult(
+                order=np.asarray(res.order),
+                adjacency=np.asarray(res.adjacency),
+                resid_var=np.asarray(res.resid_var),
+            )
+
     def run(self, requests: List[FitRequest]) -> List[FitRequest]:
         by_shape = {}
         for r in requests:
             by_shape.setdefault(np.asarray(r.data).shape, []).append(r)
         for shape, group in by_shape.items():
+            if self.config.partition is not None:
+                self._run_mesh(group)
+                continue
             for start in range(0, len(group), self.batch_size):
                 chunk = group[start:start + self.batch_size]
                 bucket = self._bucket(len(chunk))

@@ -103,14 +103,26 @@ def test_var_lingam_recovers_structure():
 @pytest.mark.parametrize("seed", [0, 5])
 def test_staged_compaction_matches_full(seed):
     """Active-set compaction (§Perf) must produce the identical order."""
-    from repro.core.ordering import causal_order_staged
+    from repro.core.ordering import causal_order_compact
 
     gt = simulate_lingam(m=1500, d=13, seed=seed)
     full = np.asarray(causal_order(gt.data, backend="blocked"))
-    staged = np.asarray(
-        causal_order_staged(gt.data, backend="blocked", min_stage=3)
+    compact = np.asarray(
+        causal_order_compact(gt.data, backend="blocked", min_stage=3)
     )
-    assert np.array_equal(full, staged), (full, staged)
+    assert np.array_equal(full, compact), (full, compact)
+
+
+def test_causal_order_staged_deprecated_shim():
+    """The retired host-driven staging warns and delegates to the
+    in-trace compaction (identical order)."""
+    from repro.core.ordering import causal_order_compact, causal_order_staged
+
+    gt = simulate_lingam(m=1000, d=9, seed=1)
+    with pytest.warns(DeprecationWarning, match="causal_order_compact"):
+        staged = np.asarray(causal_order_staged(gt.data, min_stage=3))
+    compact = np.asarray(causal_order_compact(gt.data, min_stage=3))
+    assert np.array_equal(staged, compact)
 
 
 def test_ica_lingam_baseline_recovers():
