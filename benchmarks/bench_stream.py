@@ -1,0 +1,167 @@
+"""Streaming rolling-window VarLiNGAM vs from-scratch per-window refits.
+
+Slides a chunked rolling window over synthetic S&P-like series (paper
+§4.2 shapes: d=487 with --full) through the serving engine's streaming
+sessions, and times each path end to end:
+
+  * **rolling** — the streaming subsystem: incremental moment
+    update/retract per slide, VAR from the merged covariance (no
+    lstsq), chunk-accumulated ordering moments
+    (``FitConfig.moment_chunk``), staged compaction, pruning +
+    diagnostics from the moment state (``fit_from_stats``), due refits
+    batched across sessions.
+  * **scratch** — the status-quo per-window refit (the ``VarLiNGAM``
+    facade path): window lstsq + ``fit_fn`` at the facade's defaults
+    (full masked scan, data-pass pruning).
+  * **scratch_same_config** — the ablation: the identical from-scratch
+    pipeline but with the streaming fit config, isolating what the
+    incremental statistics alone buy.
+
+Reports per-slide wall seconds, the two speedup ratios, and adjacency
+parity of the rolling estimates against the from-scratch oracle (the
+tests pin the tight version of this against
+``stream.window.direct_window_fit``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core import api
+from repro.core.var_lingam import estimate_var
+from repro.data.simulate import simulate_var_stocks
+from repro.serve.engine import CausalDiscoveryEngine
+from repro.stream import StreamConfig
+
+
+def _scratch_window_fit(rows, lags, config):
+    """The legacy per-window pipeline: lstsq VAR + full refit."""
+    mats, _, resid = estimate_var(rows, lags)
+    result = api.fit_fn(resid, config)
+    b0 = np.asarray(result.adjacency)
+    eye = np.eye(b0.shape[0], dtype=b0.dtype)
+    thetas = [b0] + [
+        np.asarray((eye - b0) @ mats[tau]) for tau in range(lags)
+    ]
+    return result, thetas
+
+
+def run(quick: bool = True):
+    d = 64 if quick else 487
+    chunk = 128 if quick else 256
+    window_chunks = 8
+    lags = 1
+    n_streams = 2
+    n_slides = 3 if quick else 2
+    stream_fit = api.FitConfig(
+        backend="blocked", compaction="staged", moment_chunk=chunk
+    )
+    scratch_fit = api.FitConfig(backend="blocked")  # facade default plan
+
+    cfg = StreamConfig(
+        d=d, chunk=chunk, window_chunks=window_chunks, lags=lags,
+        refit_every=1, fit=stream_fit,
+    )
+    n_warm = window_chunks + 2
+    n_chunks = n_warm + n_slides
+    series = [
+        simulate_var_stocks(m=chunk * n_chunks + 8, d=d, seed=s)[0]
+        for s in range(n_streams)
+    ]
+
+    # --- rolling path through the engine (batched due refits) --------
+    eng = CausalDiscoveryEngine(batch_size=n_streams)
+    sids = [eng.open_stream(cfg) for _ in range(n_streams)]
+
+    def post_round(k):
+        out = []
+        for sid, x in zip(sids, series):
+            out += eng.post_chunk(sid, x[k * chunk:(k + 1) * chunk])
+        return out
+
+    # Warm every compiled program the timed rounds will hit: the
+    # stream-head window shape, the steady-state shape, and the
+    # steady-state *pair* bucket; then drain pending dues so the timed
+    # rounds start phase-aligned (one batched flush per round).
+    for k in range(n_warm):
+        post_round(k)
+    eng.flush_streams()
+
+    t0 = time.time()
+    deltas = []
+    for j in range(n_slides):
+        deltas += post_round(n_warm + j)
+    rolling_per_slide = (time.time() - t0) / (n_slides * n_streams)
+    assert len(deltas) == n_slides * n_streams
+    last = eng.stream_session(sids[0]).last_fit
+
+    # --- scratch paths on stream 0's timed windows -------------------
+    def window_rows(j):
+        # Include the `lags` rows preceding the window so the scratch
+        # VAR regresses exactly the window's rows (the rolling path
+        # keeps that lag context via the ring's lead tail). Timed slide
+        # j's window is chunks [n_warm + j - wc + 1, n_warm + j].
+        start = (n_warm + 1 + j - window_chunks) * chunk
+        return series[0][start - lags:start + window_chunks * chunk]
+
+    _scratch_window_fit(window_rows(-1), lags, scratch_fit)  # warm
+    t0 = time.time()
+    scratch_results = [
+        _scratch_window_fit(window_rows(j), lags, scratch_fit)
+        for j in range(n_slides)
+    ]
+    scratch_per_window = (time.time() - t0) / n_slides
+
+    _scratch_window_fit(window_rows(-1), lags, stream_fit)  # warm
+    t0 = time.time()
+    for j in range(n_slides):
+        _scratch_window_fit(window_rows(j), lags, stream_fit)
+    scratch_same_cfg = (time.time() - t0) / n_slides
+
+    # --- parity of the final timed window ----------------------------
+    sc_result, _ = scratch_results[-1]
+    order_match = bool(
+        np.array_equal(
+            np.asarray(last.result.order), np.asarray(sc_result.order)
+        )
+    )
+    adj_diff = float(
+        np.abs(
+            np.asarray(last.result.adjacency)
+            - np.asarray(sc_result.adjacency)
+        ).max()
+    )
+
+    res = {
+        "d": d,
+        "chunk": chunk,
+        "window_chunks": window_chunks,
+        "window_rows": window_chunks * chunk,
+        "lags": lags,
+        "streams": n_streams,
+        "slides": n_slides,
+        "rolling_per_slide_s": rolling_per_slide,
+        "scratch_per_window_s": scratch_per_window,
+        "scratch_same_config_s": scratch_same_cfg,
+        "speedup_vs_scratch": scratch_per_window / rolling_per_slide,
+        "speedup_same_config": scratch_same_cfg / rolling_per_slide,
+        "order_match_last_window": order_match,
+        "adj_max_diff_last_window": adj_diff,
+        "edges_last_window": int(
+            eng.stream_session(sids[0]).last_delta.n_edges
+        ),
+        "stream_fit": dataclasses.asdict(stream_fit),
+    }
+    print(
+        f"bench_stream,d={d},window={window_chunks * chunk},chunk={chunk},"
+        f"rolling={rolling_per_slide:.3f}s,"
+        f"scratch={scratch_per_window:.3f}s,"
+        f"same_cfg={scratch_same_cfg:.3f}s,"
+        f"speedup={res['speedup_vs_scratch']:.2f}x,"
+        f"speedup_same_cfg={res['speedup_same_config']:.2f}x,"
+        f"order_match={order_match},adj_max_diff={adj_diff:.2e}"
+    )
+    return res

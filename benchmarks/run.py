@@ -27,6 +27,7 @@ from benchmarks import (  # noqa: E402
     bench_sharded,
     bench_speedup,
     bench_stocks,
+    bench_stream,
 )
 
 BENCHES = {
@@ -38,6 +39,7 @@ BENCHES = {
     "models": bench_models.run,            # substrate throughput smoke
     "bootstrap": bench_bootstrap.run,      # loop vs vmap-batched engine
     "sharded": bench_sharded.run,          # mesh-plan sweep vs 1-dev oracle
+    "stream": bench_stream.run,            # rolling-window vs from-scratch
 }
 
 _REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
@@ -82,19 +84,28 @@ def main() -> None:
         json.dump(results, f, indent=1, default=default)
     print(f"wrote {args.out}")
 
-    if isinstance(results.get("sharded"), list):
-        sharded_out = os.path.join(_REPO_ROOT, "BENCH_sharded.json")
-        with open(sharded_out, "w") as f:
+    def write_artifact(name: str, payload: dict) -> None:
+        """Mirror one benchmark's results to BENCH_<name>.json at the
+        repo root — the machine-readable perf-trajectory artifacts CI
+        and future sessions diff."""
+        out = os.path.join(_REPO_ROOT, f"BENCH_{name}.json")
+        with open(out, "w") as f:
             json.dump(
                 {
-                    "bench": "sharded",
+                    "bench": name,
                     "quick": not args.full,
                     "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
-                    "rows": results["sharded"],
+                    **payload,
                 },
                 f, indent=1, default=default,
             )
-        print(f"wrote {sharded_out}")
+        print(f"wrote {out}")
+
+    if isinstance(results.get("sharded"), list):
+        write_artifact("sharded", {"rows": results["sharded"]})
+    stream_res = results.get("stream")
+    if isinstance(stream_res, dict) and "error" not in stream_res:
+        write_artifact("stream", stream_res)
 
 
 if __name__ == "__main__":

@@ -1,7 +1,14 @@
-from .api import FitConfig, FitResult, Partition, fit_fn  # noqa: F401
+from .api import (  # noqa: F401
+    FitConfig,
+    FitResult,
+    Partition,
+    fit_fn,
+    fit_from_stats,
+)
 from .batched import (  # noqa: F401
     bootstrap_fits,
     fit_many,
+    fit_many_from_stats,
     resample_indices,
 )
 from .bootstrap import BootstrapResult, bootstrap_lingam  # noqa: F401

@@ -132,6 +132,13 @@ class FitConfig:
     ``partition`` selects the execution plan: ``None`` for the local
     (single-device / vmap) plan, a :class:`Partition` for the
     ``shard_map`` mesh plan.
+
+    ``moment_chunk`` (local/vmap plans; ``blocked`` or ``pallas``
+    backend) accumulates each ordering step's pairwise moments over
+    (moment_chunk, d) sample slabs, bounding the per-step residual
+    intermediate at O(chunk * d^2) — the streaming subsystem's
+    rolling-window refits set this to the stream chunk size. The mesh
+    plan chunks through ``Partition.chunk`` instead and ignores it.
     """
 
     backend: str = "blocked"
@@ -143,12 +150,23 @@ class FitConfig:
     compaction_frac: float = 0.25
     min_stage: int = 8
     partition: Optional[Partition] = None
+    moment_chunk: Optional[int] = None
 
     def __post_init__(self):
         if isinstance(self.prune_kwargs, dict):
             object.__setattr__(
                 self, "prune_kwargs", tuple(sorted(self.prune_kwargs.items()))
             )
+        if self.moment_chunk is not None:
+            if self.backend not in ("blocked", "pallas"):
+                raise ValueError(
+                    "moment_chunk requires the blocked or pallas backend "
+                    f"(chunk accumulation has no {self.backend!r} variant)"
+                )
+            if self.moment_chunk < 1:
+                raise ValueError(
+                    f"moment_chunk must be >= 1, got {self.moment_chunk}"
+                )
 
     @property
     def prune_kwargs_dict(self) -> Dict[str, Any]:
@@ -174,7 +192,9 @@ jax.tree_util.register_dataclass(
 
 def _order_for_config(x, config: FitConfig):
     reducer = ordering.LocalReducer(
-        backend=config.backend, interpret=config.interpret
+        backend=config.backend,
+        interpret=config.interpret,
+        moment_chunk=config.moment_chunk,
     )
     if config.compaction == "none":
         return ordering.masked_order_impl(x, reducer)
@@ -240,3 +260,69 @@ def fit_fn(x, config: FitConfig = FitConfig()) -> FitResult:
 
         return sharded.fit_sharded(x, config)
     return _fit_local(x, config)
+
+
+_STATS_EPS = 1e-12
+
+
+def fit_impl_from_stats(x, mean, cov, config: FitConfig) -> FitResult:
+    """Unjitted trace body of the from-stats fit (vmapped by
+    ``batched.fit_many_from_stats``)."""
+    x = x.astype(jnp.float32)
+    mean = mean.astype(jnp.float32)
+    cov = cov.astype(jnp.float32)
+    var = jnp.maximum(jnp.diagonal(cov), _STATS_EPS)
+    x0 = (x - mean[None, :]) * jax.lax.rsqrt(var)[None, :]
+    order = _order_for_config(x0, config)
+    b = pruning.estimate_adjacency_from_cov(
+        cov,
+        order,
+        method=config.prune_method,
+        threshold=config.prune_threshold,
+        **config.prune_kwargs_dict,
+    )
+    r = jnp.eye(b.shape[0], dtype=b.dtype) - b
+    resid_var = jnp.maximum(jnp.einsum("ij,jk,ik->i", r, cov, r), 0.0)
+    return FitResult(order=order, adjacency=b, resid_var=resid_var)
+
+
+@functools.partial(jax.jit, static_argnames=("config",))
+def _fit_from_stats_local(x, mean, cov, config: FitConfig) -> FitResult:
+    return fit_impl_from_stats(x, mean, cov, config)
+
+
+def fit_from_stats(
+    x, mean, cov, config: FitConfig = FitConfig()
+) -> FitResult:
+    """DirectLiNGAM fit that reuses precomputed sufficient statistics.
+
+    The streaming entry point: ``mean``/``cov`` are the (d,) mean and
+    (d, d) ddof=0 covariance of ``x`` — maintained incrementally by the
+    rolling moment store (:mod:`repro.stream.stats`) rather than
+    recomputed from the rows. They replace every data pass the fit can
+    avoid:
+
+      * the initial standardization uses the provided moments (the
+        in-scan re-standardization then operates on already-clean
+        columns — the ordering is affine-invariant per column);
+      * adjacency pruning solves straight from ``cov``
+        (:func:`repro.core.pruning.estimate_adjacency_from_cov`) — no
+        O(m d^2) covariance matmul;
+      * residual diagnostics come from ``diag((I-B) cov (I-B)^T)``,
+        which equals the empirical residual variance exactly when
+        ``cov`` is the sample covariance of ``x``.
+
+    Only the nonlinear ordering moments still read the rows (they are
+    standardization-dependent); ``config.moment_chunk`` bounds that pass
+    at O(chunk) sample slabs. The mesh plan has no from-stats variant —
+    partitioned configs are rejected with a pointer to ``fit_fn``.
+    """
+    if config.partition is not None:
+        raise ValueError(
+            "fit_from_stats runs the local/vmap plans only; the mesh "
+            "plan recomputes statistics shard-locally — drop "
+            "config.partition or use fit_fn."
+        )
+    return _fit_from_stats_local(
+        jnp.asarray(x), jnp.asarray(mean), jnp.asarray(cov), config
+    )

@@ -35,7 +35,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .api import FitConfig, FitResult, fit_impl
+from .api import FitConfig, FitResult, fit_impl, fit_impl_from_stats
 
 
 def _require_local_plan(config: FitConfig, engine: str) -> None:
@@ -55,6 +55,21 @@ def fit_many(xs, config: FitConfig = FitConfig()) -> FitResult:
     (order: (b, d), adjacency: (b, d, d), resid_var: (b, d))."""
     _require_local_plan(config, "fit_many")
     return jax.vmap(lambda x: fit_impl(x, config))(xs)
+
+
+@functools.partial(jax.jit, static_argnames=("config",))
+def fit_many_from_stats(
+    xs, means, covs, config: FitConfig = FitConfig()
+) -> FitResult:
+    """Batched :func:`~repro.core.api.fit_from_stats`: datasets (b, m, d)
+    with their precomputed moments — means (b, d), ddof=0 covariances
+    (b, d, d) — fit as one vmapped program. The serving engine routes
+    due stream-session refits here so a burst of rolling windows costs
+    one device-parallel dispatch instead of b sequential fits."""
+    _require_local_plan(config, "fit_many_from_stats")
+    return jax.vmap(
+        lambda x, mu, cv: fit_impl_from_stats(x, mu, cv, config)
+    )(xs, means, covs)
 
 
 @functools.partial(jax.jit, static_argnames=("n_sampling", "m"))

@@ -46,23 +46,12 @@ def entropy_from_moments(m_logcosh, m_uexp):
     )
 
 
-def nonlinear_terms(u):
-    """Elementwise ``(log cosh u, u exp(-u^2/2))`` — the two integrands.
-
-    ``log cosh`` is computed in the overflow-safe form
-    ``|u| + log1p(exp(-2|u|)) - log 2``. Both terms are exactly 0 at
-    ``u = 0``, which the padded/masked reduction paths (blocked row
-    kernel, sharded column moments) rely on: zeroed pad entries
-    contribute nothing to the sums.
-
-    This is the single definition of the moment integrands shared by
-    every execution plan; only the *reductions* over samples differ
-    (plain mean, chunked scan, psum over a mesh).
-    """
-    au = jnp.abs(u)
-    logcosh = au + jnp.log1p(jnp.exp(-2.0 * au)) - jnp.log(2.0)
-    uexp = u * jnp.exp(-0.5 * u * u)
-    return logcosh, uexp
+# The single definition of the moment integrands shared by every
+# execution plan lives in ``repro.kernels.nonlinearity`` (the kernels
+# package must stay core-free); re-exported here so measure consumers
+# keep one import site. Only the *reductions* over samples differ
+# between plans (plain mean, chunked scan, psum over a mesh).
+from repro.kernels.nonlinearity import nonlinear_terms  # noqa: F401,E402
 
 
 def nonlinear_moments(u, axis=-1):

@@ -87,9 +87,20 @@ class LocalReducer:
 
     col_multiple = 1
 
-    def __init__(self, backend: str = "blocked", interpret: bool = True):
+    def __init__(
+        self,
+        backend: str = "blocked",
+        interpret: bool = True,
+        moment_chunk=None,
+    ):
         self.backend = backend
         self.interpret = interpret
+        # When set, pairwise moments accumulate over (moment_chunk, d)
+        # sample slabs (ops.pairwise_moments_chunked) so the per-step
+        # residual intermediate is O(chunk * d^2) regardless of m — the
+        # streaming plan's rolling-window refits run with chunk-bounded
+        # memory. None keeps the classic whole-slab backends.
+        self.moment_chunk = moment_chunk
 
     def mean_over_samples(self, v):
         return jnp.mean(v, axis=0)
@@ -104,6 +115,11 @@ class LocalReducer:
         return step_standardize(x, self)
 
     def moment_rows(self, x_std, c):
+        if self.moment_chunk:
+            return ops.pairwise_moments_chunked(
+                x_std, c, chunk=self.moment_chunk,
+                backend=self.backend, interpret=self.interpret,
+            )
         return ops.pairwise_moments(
             x_std, c, backend=self.backend, interpret=self.interpret
         )

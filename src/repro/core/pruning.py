@@ -55,6 +55,17 @@ def ols_rows(cov, mask_rows, cov_rows):
     return jax.vmap(solve_one)(mask_rows, cov_rows)
 
 
+def ols_from_cov(cov, order):
+    """Masked OLS adjacency from a precomputed (ddof=0) covariance.
+
+    The data-free tail of :func:`ols_adjacency`: given the centered
+    covariance — from raw data, or merged incrementally by the streaming
+    moment store — the per-variable solves need no further data pass.
+    """
+    mask = pred_mask(order)  # (d, d)
+    return ols_rows(cov, mask, cov)
+
+
 @functools.partial(jax.jit, static_argnames=())
 def ols_adjacency(x, order):
     """Batched masked OLS: B[i, j] = coefficient of x_j in the regression of
@@ -65,8 +76,7 @@ def ols_adjacency(x, order):
     m, d = x.shape
     xc = x - jnp.mean(x, axis=0, keepdims=True)
     cov = (xc.T @ xc) / m  # (d, d)
-    mask = pred_mask(order)  # (d, d)
-    return ols_rows(cov, mask, cov)
+    return ols_from_cov(cov, order)
 
 
 def _soft_threshold(z, t):
@@ -137,6 +147,28 @@ def adaptive_lasso_adjacency(x, order, lam=0.01, gamma=1.0, n_steps=400):
     return b_std * (sd[:, None] / sd[None, :])
 
 
+@functools.partial(jax.jit, static_argnames=("n_steps",))
+def adaptive_lasso_from_cov(cov, order, lam=0.01, gamma=1.0, n_steps=400):
+    """Adaptive lasso from a precomputed (ddof=0) covariance.
+
+    Same estimator as :func:`adaptive_lasso_adjacency` with the
+    correlation and OLS weights derived from ``cov`` instead of a data
+    pass (the standardized-unit quadratic is identical in exact
+    arithmetic; fp32 agreement is to reduction order). This is the
+    streaming path: the rolling moment store hands its merged covariance
+    straight to the solver.
+    """
+    d = cov.shape[0]
+    sd = jnp.maximum(jnp.sqrt(jnp.maximum(jnp.diagonal(cov), 0.0)), 1e-12)
+    corr = cov / (sd[:, None] * sd[None, :])
+    mask = pred_mask(order)
+    b_ols = ols_from_cov(cov, order) * (sd[None, :] / sd[:, None])
+    w = 1.0 / jnp.maximum(jnp.abs(b_ols), 1e-3) ** gamma
+    lip = jnp.float32(d)
+    b_std = lasso_rows(corr, mask, corr, w, lam, lip, n_steps)
+    return b_std * (sd[:, None] / sd[None, :])
+
+
 def apply_threshold(b, threshold: float):
     """Zero entries with |B_ij| < threshold (no-op for threshold <= 0)."""
     if threshold > 0.0:
@@ -152,6 +184,25 @@ def estimate_adjacency(
         b = ols_adjacency(x, order)
     elif method == "adaptive_lasso":
         b = adaptive_lasso_adjacency(x, order, **kw)
+    else:
+        raise ValueError(f"unknown method: {method}")
+    return apply_threshold(b, threshold)
+
+
+def estimate_adjacency_from_cov(
+    cov, order, method: str = "ols", threshold: float = 0.0, **kw
+):
+    """:func:`estimate_adjacency` from precomputed moments (no data pass).
+
+    Every supported pruner reads the data only through its centered
+    covariance, so a caller holding sufficient statistics (the streaming
+    moment store, ``api.fit_from_stats``) skips the O(m d^2) covariance
+    matmul entirely.
+    """
+    if method == "ols":
+        b = ols_from_cov(cov, order)
+    elif method == "adaptive_lasso":
+        b = adaptive_lasso_from_cov(cov, order, **kw)
     else:
         raise ValueError(f"unknown method: {method}")
     return apply_threshold(b, threshold)

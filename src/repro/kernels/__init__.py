@@ -1,7 +1,9 @@
+from .nonlinearity import nonlinear_terms  # noqa: F401
 from .ops import (  # noqa: F401
     correlation,
     pairwise_moments,
     pairwise_moments_blocked,
+    pairwise_moments_chunked,
     standardize,
 )
 from .pairwise_stats import pairwise_moments_pallas  # noqa: F401

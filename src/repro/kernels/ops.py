@@ -21,24 +21,13 @@ import jax
 import jax.numpy as jnp
 
 from . import pairwise_stats, ref
+from .nonlinearity import nonlinear_terms as _nonlinear_terms  # noqa: F401
 
 _DEFAULT_BACKEND = "blocked"
 
 
 def _round_up(x: int, k: int) -> int:
     return ((x + k - 1) // k) * k
-
-
-def _nonlinear_terms(u):
-    """Elementwise ``(log cosh u, u exp(-u^2/2))`` moment integrands.
-
-    Kernel-local copy of ``repro.core.measures.nonlinear_terms`` — the
-    kernels package stays free of core imports. Both terms are 0 at
-    ``u = 0``, which the masked/padded reductions below rely on.
-    """
-    au = jnp.abs(u)
-    logcosh = au + jnp.log1p(jnp.exp(-2.0 * au)) - jnp.log(2.0)
-    return logcosh, u * jnp.exp(-0.5 * u * u)
 
 
 def pairwise_moments_blocked(x_std, c, block: int = 64):
@@ -190,6 +179,91 @@ def pairwise_moment_sums_rows(
     )
     (s1, s2), _ = jax.lax.scan(body, init, jnp.arange(n_chunks))
     return s1, s2
+
+
+def pairwise_moment_sums_chunked(
+    x_std,
+    c,
+    *,
+    chunk: int = 512,
+    backend: str = _DEFAULT_BACKEND,
+    interpret: bool = True,
+):
+    """Pairwise residual moment *sums* accumulated over sample chunks.
+
+    The streaming entry point: scans ``x_std`` in (chunk, d) sample
+    slabs and accumulates the (d, d) moment sums of each slab via
+    :func:`pairwise_moment_sums_rows` (the Pallas row-tile kernel for
+    ``backend="pallas"``, the chunked jnp scan otherwise), so the peak
+    residual intermediate is O(chunk * d^2) instead of O(m * d^2) — a
+    rolling window's moments cost one chunk of live memory regardless
+    of window length.
+
+    Args:
+      x_std: (m, d) data standardized by the *window's* statistics.
+      c:     (d, d) window correlation.
+    Returns:
+      (S1, S2): (d, d) fp32 sums over all m samples; divide by m for the
+      means (:func:`pairwise_moments_chunked`). The sample axis is
+      zero-padded to a chunk multiple — both integrands vanish at 0, so
+      pad rows contribute nothing.
+    """
+    m, d = x_std.shape
+    chunk = max(1, min(chunk, m))
+    if backend != "pallas":
+        # The row-tile entry already scans masked (chunk, d) slabs over
+        # the full row range for the jnp backend.
+        return pairwise_moment_sums_rows(
+            x_std, c, 0, d, chunk=chunk, backend=backend,
+            interpret=interpret,
+        )
+    # Pallas path: the kernel wants a chunk-divisible sample axis, so
+    # pad with zero rows (both integrands vanish at 0) and scan the
+    # row-tile kernel over chunk slabs.
+    m_pad = _round_up(m, chunk)
+    x = jnp.pad(x_std.astype(jnp.float32), ((0, m_pad - m), (0, 0)))
+    n_chunks = m_pad // chunk
+
+    def body(carry, k):
+        s1, s2 = carry
+        xs = jax.lax.dynamic_slice_in_dim(x, k * chunk, chunk, 0)
+        t1, t2 = pairwise_moment_sums_rows(
+            xs, c, 0, d, chunk=chunk, backend=backend, interpret=interpret
+        )
+        return (s1 + t1, s2 + t2), None
+
+    init = (
+        jnp.zeros((d, d), jnp.float32),
+        jnp.zeros((d, d), jnp.float32),
+    )
+    (s1, s2), _ = jax.lax.scan(body, init, jnp.arange(n_chunks))
+    return s1, s2
+
+
+@functools.partial(
+    jax.jit, static_argnames=("chunk", "backend", "interpret")
+)
+def pairwise_moments_chunked(
+    x_std,
+    c,
+    *,
+    chunk: int = 512,
+    backend: str = _DEFAULT_BACKEND,
+    interpret: bool = True,
+):
+    """Chunk-accumulated pairwise moment *means*: sums / m.
+
+    Drop-in for :func:`pairwise_moments` with O(chunk)-bounded sample
+    intermediates (``FitConfig.moment_chunk`` routes the local plan's
+    ordering here). Agrees with the unchunked backends to fp32
+    accumulation order.
+    """
+    m, _ = x_std.shape
+    s1, s2 = pairwise_moment_sums_chunked(
+        x_std, c, chunk=chunk, backend=backend, interpret=interpret
+    )
+    inv_m = jnp.float32(1.0 / m)
+    return s1 * inv_m, s2 * inv_m
 
 
 def _pick_blocks(d: int, m: int):

@@ -21,6 +21,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from .nonlinearity import nonlinear_terms
+
 EPS = 1e-12
 
 
@@ -53,8 +55,7 @@ def pairwise_moments_ref(x_std, c):
     r = xt[:, None, :] - c[:, :, None] * xt[None, :, :]  # (d, d, m)
     inv_std = jax.lax.rsqrt(jnp.maximum(1.0 - c * c, EPS))
     u = r * inv_std[:, :, None]
-    au = jnp.abs(u)
-    logcosh = au + jnp.log1p(jnp.exp(-2.0 * au)) - jnp.log(2.0)
+    logcosh, uexp = nonlinear_terms(u)
     m1 = jnp.mean(logcosh, axis=-1)
-    m2 = jnp.mean(u * jnp.exp(-0.5 * u * u), axis=-1)
+    m2 = jnp.mean(uexp, axis=-1)
     return m1, m2

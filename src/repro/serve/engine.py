@@ -9,12 +9,21 @@ fit requests are grouped by (m, d) shape, padded to a fixed micro-batch,
 and executed through the functional core's batched engine
 (``repro.core.batched.fit_many``) — one compile per dataset shape, then
 every full micro-batch is a single device-parallel program.
+
+The engine also admits *streaming* sessions (``open_stream`` /
+``post_chunk`` / ``flush_streams``): each session owns a rolling-window
+VarLiNGAM over the incremental moment store (:mod:`repro.stream`);
+posted chunks advance the window in O(chunk d^2), and due refits across
+sessions are bucketed by (residual shape, fit config) and executed
+through ``batched.fit_many_from_stats`` — a burst of due windows costs
+one device-parallel program, and each client gets back a
+:class:`~repro.stream.session.GraphDelta` rather than the full matrix.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +33,8 @@ from repro.configs.base import ArchConfig
 from repro.core import api as lingam_api
 from repro.core import batched as lingam_batched
 from repro.models import model as model_lib
+from repro.stream import session as stream_session
+from repro.stream import window as stream_window
 
 
 @dataclasses.dataclass
@@ -124,12 +135,21 @@ class CausalDiscoveryEngine:
       requests run sequentially; the per-(m, d) shape bucket still
       reuses the sharded compile cache, which is what keeps mixed
       traffic from recompiling per request.
+
+    Streaming traffic is the third regime: ``open_stream`` admits a
+    session, ``post_chunk`` advances its rolling window (cheap — no
+    fit), and due refits are *batched across sessions* on flush through
+    ``fit_many_from_stats`` with the same shape-bucketed padding
+    discipline as the one-shot path. ``post_chunk`` auto-flushes once a
+    full micro-batch of sessions is due.
     """
 
     def __init__(self, config: Optional[lingam_api.FitConfig] = None,
                  *, batch_size: int = 8):
         self.config = config or lingam_api.FitConfig(compaction="staged")
         self.batch_size = batch_size
+        self._streams: Dict[str, stream_session.StreamSession] = {}
+        self._next_sid = 0
 
     def _bucket(self, n: int) -> int:
         b = 1
@@ -177,3 +197,93 @@ class CausalDiscoveryEngine:
                         order=order[i], adjacency=adj[i], resid_var=rv[i]
                     )
         return requests
+
+    # ------------------------------------------------------------------
+    # Streaming sessions
+    # ------------------------------------------------------------------
+
+    def open_stream(
+        self, config: stream_session.StreamConfig
+    ) -> str:
+        """Admit a streaming session; returns its session id."""
+        sid = f"stream-{self._next_sid}"
+        self._next_sid += 1
+        self._streams[sid] = stream_session.StreamSession(sid, config)
+        return sid
+
+    def post_chunk(
+        self, sid: str, rows
+    ) -> List[Tuple[str, stream_session.GraphDelta]]:
+        """Advance a session's window by one chunk (O(chunk d^2), no
+        fit). Auto-flushes — returning (sid, delta) pairs — once a full
+        micro-batch of sessions is due, counting only sessions whose
+        windows are full (a still-filling session cannot become due
+        without its own posts, so it must not starve the active ones).
+        A due refit is deferred at most one of its session's own posts
+        waiting for peers to join the batch: if this session was
+        already due *before* this post, the flush happens now, so a
+        ready-but-idle peer delays an active client by one chunk at
+        worst. Returns [] when nothing flushed (call
+        :meth:`flush_streams` to force pending refits out)."""
+        session = self._streams[sid]
+        was_due = session.due
+        session.post(rows)
+        n_due = sum(1 for s in self._streams.values() if s.due)
+        n_ready = sum(
+            1 for s in self._streams.values() if s.rolling.ready
+        )
+        if n_due and (was_due or n_due >= min(self.batch_size, n_ready)):
+            return self.flush_streams()
+        return []
+
+    def flush_streams(self) -> List[Tuple[str, stream_session.GraphDelta]]:
+        """Execute every due session's refit, batched.
+
+        Due sessions' :class:`~repro.stream.window.RefitPlan`s are
+        bucketed by (residual shape, fit config); each bucket is padded
+        to the power-of-two micro-batch and run as one
+        ``fit_many_from_stats`` program — the streaming analogue of
+        :meth:`run`'s shape bucketing.
+        """
+        due = [
+            (sid, s) for sid, s in self._streams.items() if s.due
+        ]
+        out: List[Tuple[str, stream_session.GraphDelta]] = []
+        buckets: Dict[object, List] = {}
+        for sid, s in due:
+            plan = s.rolling.prepare_refit()
+            key = stream_session.bucket_key(s, plan)
+            buckets.setdefault(key, []).append((sid, s, plan))
+        for (shape, config), group in buckets.items():
+            for start in range(0, len(group), self.batch_size):
+                part = group[start:start + self.batch_size]
+                bucket = self._bucket(len(part))
+                pad = bucket - len(part)
+                plans = [p for _, _, p in part] + [part[0][2]] * pad
+                results = lingam_batched.fit_many_from_stats(
+                    jnp.stack([p.resid for p in plans]),
+                    jnp.stack([p.resid_mean for p in plans]),
+                    jnp.stack([p.resid_cov for p in plans]),
+                    config,
+                )
+                order = np.asarray(results.order)
+                adj = np.asarray(results.adjacency)
+                rv = np.asarray(results.resid_var)
+                for i, (sid, s, plan) in enumerate(part):
+                    fit = stream_window.finish_refit(
+                        plan,
+                        lingam_api.FitResult(
+                            order=order[i], adjacency=adj[i],
+                            resid_var=rv[i],
+                        ),
+                    )
+                    out.append((sid, s.apply_fit(fit)))
+        return out
+
+    def stream_session(self, sid: str) -> stream_session.StreamSession:
+        """The live session object (last_fit / last_delta / state)."""
+        return self._streams[sid]
+
+    def close_stream(self, sid: str) -> stream_session.StreamSession:
+        """Retire a session, returning its final state."""
+        return self._streams.pop(sid)

@@ -1,0 +1,172 @@
+"""Streaming sessions: per-client rolling state + graph deltas.
+
+A :class:`StreamSession` is the serving-side wrapper around one
+:class:`~repro.stream.window.RollingVarLiNGAM`: clients post (chunk, d)
+row blocks, the session tracks when a refit is *due* (window full and
+``refit_every`` chunks absorbed since the last estimate), and each
+completed refit is summarized as a :class:`GraphDelta` against the
+session's previous adjacency — the increment a subscriber actually
+wants, not the full (d, d) matrix every slide.
+
+Sessions do not execute refits themselves: the engine
+(:class:`repro.serve.engine.CausalDiscoveryEngine`) collects due
+sessions, groups their :class:`~repro.stream.window.RefitPlan`s by
+(shape, fit-config) bucket, and runs each bucket through the batched
+``fit_many_from_stats`` path — one device-parallel program per burst of
+due windows. ``StreamSession.refit_now`` keeps a direct single-session
+path for library use.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import api
+from . import window as window_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    """Static shape/cadence knobs of one streaming session.
+
+    ``chunk`` rows arrive per post; ``window_chunks`` chunks form the
+    rolling window; a refit is due every ``refit_every`` chunks once the
+    window is full. ``delta_threshold`` binarizes adjacencies for the
+    edge add/remove sets. ``reanchor_every`` (slides) caps moment-
+    retraction drift on non-stationary streams (0 = never; see
+    :mod:`repro.stream.stats` for when that is safe to leave off).
+    """
+
+    d: int
+    chunk: int
+    window_chunks: int
+    lags: int = 1
+    refit_every: int = 1
+    delta_threshold: float = 0.05
+    reanchor_every: int = 0
+    fit: api.FitConfig = api.FitConfig(compaction="staged")
+
+
+@dataclasses.dataclass
+class GraphDelta:
+    """One refit's change against the session's previous estimate."""
+
+    refit_index: int            # 0 for the first estimate of a session
+    n_edges: int                # |{(i, j): |B0_ij| > threshold}| now
+    added: np.ndarray           # (a, 2) int (i, j) edges newly above
+    removed: np.ndarray         # (r, 2) int edges newly below
+    max_abs_change: float       # max |B0_new - B0_prev| (0.0 on first)
+    frob_change: float          # ||B0_new - B0_prev||_F (0.0 on first)
+
+    def summary(self) -> str:
+        return (
+            f"refit {self.refit_index}: edges={self.n_edges} "
+            f"+{len(self.added)}/-{len(self.removed)} "
+            f"max|dB|={self.max_abs_change:.4f} "
+            f"frob(dB)={self.frob_change:.4f}"
+        )
+
+
+def graph_delta(
+    prev: Optional[np.ndarray],
+    new: np.ndarray,
+    threshold: float,
+    refit_index: int,
+) -> GraphDelta:
+    """Edge-set and magnitude delta between two adjacency estimates."""
+    new = np.asarray(new)
+    mask_new = np.abs(new) > threshold
+    if prev is None:
+        return GraphDelta(
+            refit_index=refit_index,
+            n_edges=int(mask_new.sum()),
+            added=np.argwhere(mask_new),
+            removed=np.zeros((0, 2), dtype=np.int64),
+            max_abs_change=0.0,
+            frob_change=0.0,
+        )
+    prev = np.asarray(prev)
+    mask_prev = np.abs(prev) > threshold
+    diff = new - prev
+    return GraphDelta(
+        refit_index=refit_index,
+        n_edges=int(mask_new.sum()),
+        added=np.argwhere(mask_new & ~mask_prev),
+        removed=np.argwhere(mask_prev & ~mask_new),
+        max_abs_change=float(np.abs(diff).max()),
+        frob_change=float(np.linalg.norm(diff)),
+    )
+
+
+class StreamSession:
+    """One client's rolling discovery state inside the engine."""
+
+    def __init__(self, sid: str, config: StreamConfig):
+        self.sid = sid
+        self.config = config
+        self.rolling = window_lib.RollingVarLiNGAM(
+            config.d,
+            config.chunk,
+            config.window_chunks,
+            lags=config.lags,
+            config=config.fit,
+            reanchor_every=config.reanchor_every,
+        )
+        self._chunks_since_refit = 0
+        self.n_refits = 0
+        self.last_fit: Optional[window_lib.RollingFit] = None
+        self.last_delta: Optional[GraphDelta] = None
+        self._prev_adjacency: Optional[np.ndarray] = None
+
+    def post(self, rows) -> bool:
+        """Absorb one chunk; returns True when a refit is now due."""
+        self.rolling.push(rows)
+        if self.rolling.ready:
+            self._chunks_since_refit += 1
+        return self.due
+
+    @property
+    def due(self) -> bool:
+        return (
+            self.rolling.ready
+            and self._chunks_since_refit >= self.config.refit_every
+        )
+
+    def apply_fit(self, fit: window_lib.RollingFit) -> GraphDelta:
+        """Record a completed refit; returns the delta vs the previous
+        estimate (thresholded at ``config.delta_threshold``)."""
+        b0 = np.asarray(fit.result.adjacency)
+        delta = graph_delta(
+            self._prev_adjacency, b0, self.config.delta_threshold,
+            self.n_refits,
+        )
+        self._prev_adjacency = b0
+        self.last_fit = fit
+        self.last_delta = delta
+        self.n_refits += 1
+        self._chunks_since_refit = 0
+        return delta
+
+    def refit_now(self) -> GraphDelta:
+        """Single-session refit path (no engine batching)."""
+        return self.apply_fit(self.rolling.refit())
+
+
+def bucket_key(
+    session: StreamSession, plan: window_lib.RefitPlan
+) -> Tuple[Tuple[int, ...], api.FitConfig]:
+    """Batched-execution bucket: identical residual shapes + identical
+    (hashable) fit configs share one ``fit_many_from_stats`` program."""
+    return tuple(plan.resid.shape), session.rolling.config
+
+
+__all__: List[str] = [
+    "GraphDelta",
+    "StreamConfig",
+    "StreamSession",
+    "bucket_key",
+    "graph_delta",
+]

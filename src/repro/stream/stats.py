@@ -1,0 +1,161 @@
+"""Incremental moment store: mergeable sufficient statistics.
+
+:class:`MomentState` holds the (count, mean, centered second moment)
+of a set of sample rows as a registered pytree, closed under two
+operations:
+
+  * ``merge(a, b)`` — Chan et al.'s pairwise update: the state of the
+    union of two disjoint row sets, from their states alone. Numerically
+    safe where the one-pass ``E[x^2] - mu^2`` form cancels (the same
+    fp32 discipline as the two-pass ``step_standardize``): the second
+    moments stay *centered* end to end, and the cross term enters as a
+    rank-1 ``outer(delta, delta)`` correction.
+  * ``retract(s, b)`` — the exact algebraic inverse of ``merge``: the
+    state of ``s``'s rows minus ``b``'s. A rolling window advances by
+    absorbing the new chunk and retracting the expired one, O(chunk d^2)
+    per slide instead of an O(window d^2) rescan.
+
+``update_chunk`` / ``retract_chunk`` wrap the two with a direct
+two-pass summary of the raw rows (:func:`from_chunk`). All five are
+jitted; the state flows through ``jit``/``vmap`` freely.
+
+Retraction is subtraction, so it cancels: each retired chunk removes
+mass of the same magnitude it added, and fp32 error accumulates with
+the *stream length*, not the window length. It is numerically safe
+while the window mean drifts slowly relative to the column scales
+(stationary or slowly-varying series); for adversarial drift, re-anchor
+periodically by rebuilding the state from the live chunks
+(``RollingVarLiNGAM(reanchor_every=...)`` does exactly this).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class MomentState:
+    """Sufficient statistics of ``count`` sample rows in R^d.
+
+    ``m2`` is the *centered* second-moment sum
+    ``sum_t (x_t - mean)(x_t - mean)^T`` — divide by ``count`` for the
+    ddof=0 covariance. ``count`` is carried as f32 so the state is a
+    uniform pytree under ``vmap``/``scan``.
+    """
+
+    count: jax.Array  # ()     f32 — number of absorbed rows
+    mean: jax.Array   # (d,)   f32
+    m2: jax.Array     # (d, d) f32 — centered second-moment sums
+
+    def merge(self, other: "MomentState") -> "MomentState":
+        return merge(self, other)
+
+    def update_chunk(self, rows) -> "MomentState":
+        return update_chunk(self, rows)
+
+    def retract_chunk(self, rows) -> "MomentState":
+        return retract_chunk(self, rows)
+
+    @property
+    def covariance(self):
+        return covariance(self)
+
+
+jax.tree_util.register_dataclass(
+    MomentState,
+    data_fields=["count", "mean", "m2"],
+    meta_fields=[],
+)
+
+
+def init(d: int) -> MomentState:
+    """Empty state over d variables (identity of ``merge``)."""
+    return MomentState(
+        count=jnp.float32(0.0),
+        mean=jnp.zeros((d,), jnp.float32),
+        m2=jnp.zeros((d, d), jnp.float32),
+    )
+
+
+@jax.jit
+def from_chunk(rows) -> MomentState:
+    """Direct two-pass summary of (n, d) raw rows.
+
+    This is the ground-truth computation the merge/retract algebra must
+    round-trip to (the property tests pin it): mean first, then centered
+    outer products — never ``E[x^2] - mu^2``.
+    """
+    rows = rows.astype(jnp.float32)
+    n = rows.shape[0]
+    mu = jnp.mean(rows, axis=0)
+    xc = rows - mu[None, :]
+    return MomentState(count=jnp.float32(n), mean=mu, m2=xc.T @ xc)
+
+
+@jax.jit
+def merge(a: MomentState, b: MomentState) -> MomentState:
+    """Chan-style pairwise merge of two disjoint row sets' states.
+
+    Commutative and associative up to fp32 rounding; ``init(d)`` is the
+    identity. Safe when either side is empty.
+    """
+    n = a.count + b.count
+    n_safe = jnp.maximum(n, 1.0)
+    delta = b.mean - a.mean
+    mean = a.mean + delta * (b.count / n_safe)
+    m2 = a.m2 + b.m2 + jnp.outer(delta, delta) * (a.count * b.count / n_safe)
+    return MomentState(count=n, mean=mean, m2=m2)
+
+
+@jax.jit
+def retract(s: MomentState, b: MomentState) -> MomentState:
+    """Inverse merge: the state of ``s``'s rows with ``b``'s removed.
+
+    Exact algebraic inverse of ``merge(a, b) -> s`` solved for ``a``;
+    requires ``b``'s rows to be a subset of the mass in ``s``
+    (``b.count <= s.count``). Retracting everything returns a zeroed
+    state (guarded divisions).
+    """
+    na = s.count - b.count
+    na_safe = jnp.maximum(na, 1.0)
+    mean_a = (s.count * s.mean - b.count * b.mean) / na_safe
+    delta = b.mean - mean_a
+    m2 = s.m2 - b.m2 - jnp.outer(delta, delta) * (
+        na * b.count / jnp.maximum(s.count, 1.0)
+    )
+    empty = na <= 0.0
+    return MomentState(
+        count=jnp.maximum(na, 0.0),
+        mean=jnp.where(empty, 0.0, mean_a),
+        m2=jnp.where(empty, 0.0, m2),
+    )
+
+
+def update_chunk(s: MomentState, rows) -> MomentState:
+    """Absorb (n, d) raw rows: ``merge(s, from_chunk(rows))``."""
+    return merge(s, from_chunk(jnp.asarray(rows)))
+
+
+def retract_chunk(s: MomentState, rows) -> MomentState:
+    """Remove previously absorbed (n, d) raw rows from the state."""
+    return retract(s, from_chunk(jnp.asarray(rows)))
+
+
+def covariance(s: MomentState):
+    """(d, d) ddof=0 covariance of the absorbed rows."""
+    return s.m2 / jnp.maximum(s.count, 1.0)
+
+
+def variance(s: MomentState):
+    """(d,) ddof=0 per-column variances."""
+    return jnp.diagonal(covariance(s))
+
+
+def correlation(s: MomentState, eps: float = 1e-12):
+    """(d, d) correlation derived from the covariance."""
+    cov = covariance(s)
+    sd = jnp.maximum(jnp.sqrt(jnp.maximum(jnp.diagonal(cov), 0.0)), eps)
+    return cov / (sd[:, None] * sd[None, :])
