@@ -1,0 +1,84 @@
+"""Heuristic-vs-tuned kernel plans per shape bucket -> BENCH_kernels.json.
+
+For each (op, shape) cell the autotuner measures its aligned,
+VMEM-bounded candidate grid (through the real ops wrappers) and the row
+reports the heuristic plan's time next to the tuned winner's — the
+measured answer to "what did replacing the static ``_pick_blocks``
+heuristic with the dispatch subsystem buy at this shape bucket".
+
+Run via ``python -m benchmarks.run --only tune``; the harness mirrors
+the result to repo-root ``BENCH_kernels.json``. Measurements land in a
+throwaway overlay (the user tuning cache is not touched); on CPU the
+Pallas cells run the interpreter, so treat those rows as plumbing
+verification — the accelerator rows are the product numbers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import tempfile
+
+
+def run(quick: bool = True):
+    from repro.kernels.tune import autotune, cache, registry
+
+    if quick:
+        cells = [
+            ("pairwise_moments", "blocked", (512, 16), None),
+            ("pairwise_moments", "blocked", (1024, 32), None),
+            ("pairwise_moments", "pallas", (256, 16), None),
+            ("pairwise_moment_sums_chunked", "blocked", (1024, 16), 256),
+        ]
+        repeats = 2
+    else:
+        cells = [
+            ("pairwise_moments", "blocked", (2048, 64), None),
+            ("pairwise_moments", "blocked", (8192, 128), None),
+            ("pairwise_moments", "pallas", (1024, 64), None),
+            ("pairwise_moment_sums_rows", "pallas", (64, 64, 2048), 512),
+            ("pairwise_moment_sums_chunked", "blocked", (4096, 64), 512),
+            ("fused_moment_sums", "pallas", (8, 64, 1024), None),
+        ]
+        repeats = 3
+
+    overlay = os.path.join(
+        tempfile.mkdtemp(prefix="repro-tune-"), "overlay.json"
+    )
+    table = cache.TuneTable(overlay_path_=overlay)
+    rows = []
+    for op, backend, shape, chunk in cells:
+        tuned = autotune.autotune_op(
+            op, shape, backend=backend, chunk=chunk,
+            repeats=repeats, quick=quick, table=table,
+        )
+        heur = registry.dispatch_heuristic(
+            op, shape, backend=backend, chunk=chunk
+        )
+        by_plan = {
+            dataclasses.replace(m.plan, source=""): m.seconds
+            for m in tuned.measurements
+        }
+        heur_s = by_plan.get(dataclasses.replace(heur, source=""))
+        best_s = min(m.seconds for m in tuned.measurements)
+        row = {
+            "op": op,
+            "backend": backend,
+            "shape": list(shape),
+            "bucket": cache.shape_bucket(op, shape),
+            "device_kind": tuned.device_kind,
+            "heuristic": {**heur.to_entry(), "us": (heur_s or 0.0) * 1e6},
+            "tuned": {**tuned.best.to_entry(), "us": best_s * 1e6},
+            "speedup_vs_heuristic": (
+                heur_s / best_s if heur_s and best_s else 1.0
+            ),
+            "n_candidates": len(tuned.measurements),
+        }
+        rows.append(row)
+        print(
+            f"tune,op={op},backend={backend},shape={shape},"
+            f"heur_us={row['heuristic']['us']:.1f},"
+            f"tuned_us={row['tuned']['us']:.1f},"
+            f"speedup={row['speedup_vs_heuristic']:.2f}"
+        )
+    return {"device_kind": registry.device_kind(), "rows": rows}

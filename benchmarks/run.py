@@ -2,10 +2,11 @@
 
   PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
 
-Prints ``name,metric=value,...`` CSV lines per benchmark and writes the
-aggregate JSON to experiments/bench_results.json. The sharded sweep is
-additionally mirrored to ``BENCH_sharded.json`` at the repo root — the
-machine-readable perf-trajectory artifact CI and future sessions diff.
+Prints ``name,metric=value,...`` CSV lines per benchmark and mirrors
+every benchmark's results to a repo-root ``BENCH_<artifact>.json`` file
+— the machine-readable perf-trajectory artifacts CI and future sessions
+diff (the kernel-autotuning sweep lands as ``BENCH_kernels.json``).
+``--out`` optionally also writes one aggregate JSON.
 """
 
 from __future__ import annotations
@@ -28,6 +29,7 @@ from benchmarks import (  # noqa: E402
     bench_speedup,
     bench_stocks,
     bench_stream,
+    bench_tune,
 )
 
 BENCHES = {
@@ -40,7 +42,12 @@ BENCHES = {
     "bootstrap": bench_bootstrap.run,      # loop vs vmap-batched engine
     "sharded": bench_sharded.run,          # mesh-plan sweep vs 1-dev oracle
     "stream": bench_stream.run,            # rolling-window vs from-scratch
+    "tune": bench_tune.run,                # heuristic vs tuned kernel plans
 }
+
+# Benchmark name -> repo-root artifact stem (BENCH_<stem>.json).
+ARTIFACTS = {name: name for name in BENCHES}
+ARTIFACTS["tune"] = "kernels"
 
 _REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
@@ -50,8 +57,9 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sizes (slow on CPU)")
     ap.add_argument("--only", type=str, default=None)
-    ap.add_argument("--out", type=str,
-                    default="experiments/bench_results.json")
+    ap.add_argument("--out", type=str, default=None,
+                    help="optional aggregate JSON (per-bench artifacts "
+                         "always land as repo-root BENCH_*.json)")
     args = ap.parse_args()
 
     results = {}
@@ -69,8 +77,6 @@ def main() -> None:
             results[name] = {"error": str(e)}
         print(f"=== bench:{name} done in {time.time()-t0:.1f}s ===\n")
 
-    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
-
     def default(o):
         import numpy as np
 
@@ -80,19 +86,15 @@ def main() -> None:
             return float(o)
         raise TypeError(type(o))
 
-    with open(args.out, "w") as f:
-        json.dump(results, f, indent=1, default=default)
-    print(f"wrote {args.out}")
-
-    def write_artifact(name: str, payload: dict) -> None:
-        """Mirror one benchmark's results to BENCH_<name>.json at the
+    def write_artifact(stem: str, payload: dict) -> None:
+        """Mirror one benchmark's results to BENCH_<stem>.json at the
         repo root — the machine-readable perf-trajectory artifacts CI
         and future sessions diff."""
-        out = os.path.join(_REPO_ROOT, f"BENCH_{name}.json")
+        out = os.path.join(_REPO_ROOT, f"BENCH_{stem}.json")
         with open(out, "w") as f:
             json.dump(
                 {
-                    "bench": name,
+                    "bench": stem,
                     "quick": not args.full,
                     "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
                     **payload,
@@ -101,11 +103,17 @@ def main() -> None:
             )
         print(f"wrote {out}")
 
-    if isinstance(results.get("sharded"), list):
-        write_artifact("sharded", {"rows": results["sharded"]})
-    stream_res = results.get("stream")
-    if isinstance(stream_res, dict) and "error" not in stream_res:
-        write_artifact("stream", stream_res)
+    for name, res in results.items():
+        if isinstance(res, dict) and "error" in res:
+            continue
+        payload = res if isinstance(res, dict) else {"rows": res}
+        write_artifact(ARTIFACTS[name], payload)
+
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1, default=default)
+        print(f"wrote {args.out}")
 
 
 if __name__ == "__main__":

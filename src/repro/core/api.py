@@ -139,10 +139,21 @@ class FitConfig:
     intermediate at O(chunk * d^2) — the streaming subsystem's
     rolling-window refits set this to the stream chunk size. The mesh
     plan chunks through ``Partition.chunk`` instead and ignores it.
+
+    ``backend=None`` lets the kernel registry pick (pallas on
+    accelerators, blocked elsewhere) and ``interpret=None`` resolves to
+    interpret-only-when-no-accelerator. ``tune`` selects how block
+    shapes/variants are decided (:mod:`repro.kernels.tune`):
+    ``"off"`` — deterministic heuristic, no tuning-table reads (the
+    offline mode); ``"cache"`` (default) — tuned plans from the
+    persistent table, heuristic fallback, never measures; ``"auto"`` —
+    timed search on a table miss, persisted to the user overlay. Tuned
+    and heuristic plans are bit-identical in output (the dispatch
+    parity contract), so ``tune`` never changes results — only speed.
     """
 
-    backend: str = "blocked"
-    interpret: bool = True
+    backend: Optional[str] = None
+    interpret: Optional[bool] = None
     prune_method: str = "ols"
     prune_threshold: float = 0.0
     prune_kwargs: Tuple[Tuple[str, Any], ...] = ()
@@ -151,14 +162,19 @@ class FitConfig:
     min_stage: int = 8
     partition: Optional[Partition] = None
     moment_chunk: Optional[int] = None
+    tune: str = "cache"
 
     def __post_init__(self):
         if isinstance(self.prune_kwargs, dict):
             object.__setattr__(
                 self, "prune_kwargs", tuple(sorted(self.prune_kwargs.items()))
             )
+        if self.tune not in ("off", "cache", "auto"):
+            raise ValueError(
+                f"tune must be 'off', 'cache', or 'auto', got {self.tune!r}"
+            )
         if self.moment_chunk is not None:
-            if self.backend not in ("blocked", "pallas"):
+            if self.backend not in (None, "blocked", "pallas"):
                 raise ValueError(
                     "moment_chunk requires the blocked or pallas backend "
                     f"(chunk accumulation has no {self.backend!r} variant)"
@@ -195,6 +211,7 @@ def _order_for_config(x, config: FitConfig):
         backend=config.backend,
         interpret=config.interpret,
         moment_chunk=config.moment_chunk,
+        tune=config.tune,
     )
     if config.compaction == "none":
         return ordering.masked_order_impl(x, reducer)

@@ -72,6 +72,18 @@ def fit_many_from_stats(
     )(xs, means, covs)
 
 
+def warmup_fit_many(shape, config: FitConfig = FitConfig(), *, batch: int = 1):
+    """Prime the vmap plan for datasets of ``shape`` before traffic
+    arrives: one zeros-fit traces + compiles ``fit_many`` (and, through
+    dispatch at trace time, freezes the kernel block plans currently in
+    the tuning table). The serving engine's ``warmup`` calls this after
+    resolving/measuring plans so first requests pay neither search nor
+    compile."""
+    m, d = shape
+    xs = jnp.zeros((batch, m, d), jnp.float32)
+    jax.block_until_ready(fit_many(xs, config).order)
+
+
 @functools.partial(jax.jit, static_argnames=("n_sampling", "m"))
 def resample_indices(seed, n_sampling: int, m: int):
     """(n_sampling, m) int32 bootstrap row indices, drawn on-device."""

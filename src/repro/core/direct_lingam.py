@@ -34,13 +34,14 @@ from . import api
 
 @dataclasses.dataclass
 class DirectLiNGAM:
-    backend: str = "blocked"
-    interpret: bool = True
+    backend: Optional[str] = None
+    interpret: Optional[bool] = None
     prune_method: str = "ols"
     prune_threshold: float = 0.0
     prune_kwargs: dict = dataclasses.field(default_factory=dict)
     compaction: str = "none"
     partition: Optional[api.Partition] = None
+    tune: str = "cache"
 
     causal_order_: Optional[np.ndarray] = None
     adjacency_: Optional[np.ndarray] = None
@@ -57,6 +58,7 @@ class DirectLiNGAM:
             prune_kwargs=dict(self.prune_kwargs),
             compaction=self.compaction,
             partition=self.partition,
+            tune=self.tune,
         )
 
     def fit(self, x) -> "DirectLiNGAM":

@@ -89,9 +89,10 @@ class LocalReducer:
 
     def __init__(
         self,
-        backend: str = "blocked",
-        interpret: bool = True,
+        backend: str = None,
+        interpret: bool = None,
         moment_chunk=None,
+        tune: str = "cache",
     ):
         self.backend = backend
         self.interpret = interpret
@@ -101,6 +102,9 @@ class LocalReducer:
         # streaming plan's rolling-window refits run with chunk-bounded
         # memory. None keeps the classic whole-slab backends.
         self.moment_chunk = moment_chunk
+        # Dispatch mode for the block-shape/variant decisions
+        # (repro.kernels.tune): "off" | "cache" | "auto".
+        self.tune = tune
 
     def mean_over_samples(self, v):
         return jnp.mean(v, axis=0)
@@ -119,9 +123,11 @@ class LocalReducer:
             return ops.pairwise_moments_chunked(
                 x_std, c, chunk=self.moment_chunk,
                 backend=self.backend, interpret=self.interpret,
+                tune_mode=self.tune,
             )
         return ops.pairwise_moments(
-            x_std, c, backend=self.backend, interpret=self.interpret
+            x_std, c, backend=self.backend, interpret=self.interpret,
+            tune_mode=self.tune,
         )
 
     def gather_rows(self, rows):
@@ -171,7 +177,7 @@ def step_scores(cm1, cm2, m1, m2, active):
     return jnp.where(active, k_list, _NEG_INF)
 
 
-def ordering_scores(x, active, *, backend="blocked", interpret=True):
+def ordering_scores(x, active, *, backend=None, interpret=None):
     """k_list scores for one ordering step (local plan).
 
     Args:
@@ -266,7 +272,7 @@ def masked_order_impl(x, reducer, *, d=None, unroll=False):
 @functools.partial(
     jax.jit, static_argnames=("backend", "interpret", "unroll")
 )
-def causal_order(x, *, backend="blocked", interpret=True, unroll=False):
+def causal_order(x, *, backend=None, interpret=None, unroll=False):
     """Full causal ordering of all d variables (local plan).
 
     Returns ``order`` (d,) int32 — order[p] is the variable at causal
@@ -353,7 +359,7 @@ def compact_order_impl(x, reducer, *, d=None, frac=0.25, min_stage=8):
     static_argnames=("backend", "interpret", "frac", "min_stage"),
 )
 def causal_order_compact(
-    x, *, backend="blocked", interpret=True, frac=0.25, min_stage=8
+    x, *, backend=None, interpret=None, frac=0.25, min_stage=8
 ):
     """Single-compile staged-compaction ordering (see impl docstring)."""
     return compact_order_impl(
@@ -363,7 +369,7 @@ def causal_order_compact(
 
 
 def causal_order_staged(
-    x, *, backend="blocked", interpret=True, min_stage=32
+    x, *, backend=None, interpret=None, min_stage=32
 ):
     """Deprecated alias of :func:`causal_order_compact`.
 

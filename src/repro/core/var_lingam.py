@@ -49,12 +49,13 @@ def estimate_var(x, lags: int = 1):
 @dataclasses.dataclass
 class VarLiNGAM:
     lags: int = 1
-    backend: str = "blocked"
-    interpret: bool = True
+    backend: Optional[str] = None
+    interpret: Optional[bool] = None
     prune_method: str = "ols"
     prune_threshold: float = 0.0
     compaction: str = "none"
     partition: Optional[api.Partition] = None
+    tune: str = "cache"
 
     causal_order_: Optional[np.ndarray] = None
     adjacency_matrices_: Optional[List[np.ndarray]] = None  # [theta_0..k]
@@ -70,6 +71,7 @@ class VarLiNGAM:
             prune_threshold=self.prune_threshold,
             compaction=self.compaction,
             partition=self.partition,
+            tune=self.tune,
         )
 
     def fit(self, x) -> "VarLiNGAM":

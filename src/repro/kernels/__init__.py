@@ -1,6 +1,8 @@
+from . import tune  # noqa: F401
 from .nonlinearity import nonlinear_terms  # noqa: F401
 from .ops import (  # noqa: F401
     correlation,
+    fused_moment_rows,
     pairwise_moments,
     pairwise_moments_blocked,
     pairwise_moments_chunked,

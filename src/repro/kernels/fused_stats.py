@@ -21,6 +21,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .pairwise_stats import _accumulate, _fit_block
+from .tune.registry import dispatch
+
 EPS = 1e-12
 LOG2 = 0.6931471805599453
 
@@ -54,8 +57,9 @@ def _fused_kernel(x_i_ref, x_j_ref, mu_i_ref, mu_j_ref, rs_i_ref, rs_j_ref,
     logcosh = jnp.where(valid, logcosh, 0.0)
     uexp = u * jnp.exp(-0.5 * u * u)
 
-    m1_ref[...] += jnp.sum(logcosh, axis=-1)
-    m2_ref[...] += jnp.sum(uexp, axis=-1)
+    # Fixed-width sample sub-sums (see pairwise_stats._accumulate): the
+    # reduction order is independent of the tuned bm block.
+    _accumulate(m1_ref, m2_ref, logcosh, uexp, bm)
 
 
 @functools.partial(
@@ -72,9 +76,9 @@ def fused_moment_sums(
     c_rows,
     *,
     m_total: int,
-    bi: int = 8,
-    bj: int = 128,
-    bm: int = 512,
+    bi: int = None,
+    bj: int = None,
+    bm: int = None,
     interpret: bool = False,
 ):
     """Moment *sums* for a row tile against all variables, from raw X.
@@ -83,9 +87,17 @@ def fused_moment_sums(
     x_raw_all:  (d_pad, m_pad); mu/rstd: per-variable standardization
     constants; c_rows: (tile, d_pad) correlation rows.
     Returns (S1, S2): (tile, d_pad) fp32 sums over valid samples.
+    Block shapes default to the dispatcher's plan, clamped to divisors.
     """
     tile, m_pad = x_raw_rows.shape
     d_pad = x_raw_all.shape[0]
+    if bi is None or bj is None or bm is None:
+        plan = dispatch(
+            "fused_moment_sums", (tile, d_pad, m_pad), backend="pallas"
+        )
+        bi = bi or _fit_block(tile, plan.bi)
+        bj = bj or _fit_block(d_pad, plan.bj)
+        bm = bm or (plan.bm if m_pad % plan.bm == 0 else m_pad)
     assert tile % bi == 0 and d_pad % bj == 0 and m_pad % bm == 0
     grid = (tile // bi, d_pad // bj, m_pad // bm)
     kernel = functools.partial(_fused_kernel, bm=bm, m_total=m_total)

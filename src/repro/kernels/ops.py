@@ -1,4 +1,4 @@
-"""Jit'd public wrappers around the pairwise-statistics kernel.
+"""Jit'd public wrappers around the pairwise-statistics kernels.
 
 ``pairwise_moments(x_std, c, backend=...)`` dispatches between:
 
@@ -6,15 +6,27 @@
   * ``"blocked"`` — memory-bounded jnp fallback: lax.scan over row blocks.
                     This is also what the sharded/pjit path lowers, since
                     XLA fuses it well and it needs no pallas on CPU.
-  * ``"pallas"``  — the Pallas TPU kernel (interpret=True on CPU).
+  * ``"pallas"``  — the Pallas TPU kernel (interpreted automatically when
+                    no accelerator backs the process).
 
 All backends return (M1, M2) of shape (d, d) fp32 with identical values up
 to fp32 accumulation tolerance; tests/test_kernels.py sweeps shapes/dtypes
 against the oracle.
+
+Every block-shape/variant decision in this module goes through the
+autotuning dispatcher (:func:`repro.kernels.tune.dispatch`): ``backend``
+``None`` lets the registry pick (pallas on accelerators, blocked
+elsewhere), ``interpret`` ``None`` resolves to interpret-only-on-CPU,
+``tune`` selects the dispatch mode (``"off"`` heuristic / ``"cache"`` /
+``"auto"``), and ``plan`` pins an explicit
+:class:`~repro.kernels.tune.registry.Plan` (the autotuner measuring a
+candidate). Tuned and heuristic plans produce bit-identical moments —
+see the parity contract on :mod:`repro.kernels.tune.registry`.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
@@ -22,8 +34,9 @@ import jax.numpy as jnp
 
 from . import pairwise_stats, ref
 from .nonlinearity import nonlinear_terms as _nonlinear_terms  # noqa: F401
+from .tune import registry as tune
 
-_DEFAULT_BACKEND = "blocked"
+_DEFAULT_TUNE = "cache"
 
 
 def _round_up(x: int, k: int) -> int:
@@ -60,14 +73,19 @@ def pairwise_moments_blocked(x_std, c, block: int = 64):
     return m1, m2
 
 
-@functools.partial(jax.jit, static_argnames=("backend", "interpret", "block"))
+@functools.partial(
+    jax.jit, static_argnames=("backend", "interpret", "block", "tune_mode",
+                              "plan")
+)
 def pairwise_moments(
     x_std,
     c,
     *,
-    backend: str = _DEFAULT_BACKEND,
-    interpret: bool = True,
-    block: int = 64,
+    backend: str = None,
+    interpret: bool = None,
+    block: int = None,
+    tune_mode: str = _DEFAULT_TUNE,
+    plan: tune.Plan = None,
 ):
     """Dispatching wrapper. x_std: (m, d) standardized; c: (d, d).
 
@@ -80,16 +98,25 @@ def pairwise_moments(
     if x_std.ndim == 3:
         return jax.vmap(
             lambda xb, cb: pairwise_moments(
-                xb, cb, backend=backend, interpret=interpret, block=block
+                xb, cb, backend=backend, interpret=interpret, block=block,
+                tune_mode=tune_mode, plan=plan,
             )
         )(x_std, c)
     m, d = x_std.shape
     if backend == "ref":
         return ref.pairwise_moments_ref(x_std, c)
-    if backend == "blocked":
-        return pairwise_moments_blocked(x_std, c, block=block)
-    if backend == "pallas":
-        bi, bj, bm = _pick_blocks(d, m)
+    if plan is None:
+        plan = tune.dispatch(
+            "pairwise_moments", (m, d), str(x_std.dtype), backend,
+            mode=tune_mode,
+        )
+    if plan.backend == "ref":
+        return ref.pairwise_moments_ref(x_std, c)
+    if plan.backend == "blocked":
+        return pairwise_moments_blocked(x_std, c, block=block or plan.block)
+    if plan.backend == "pallas":
+        interpret = tune.resolve_interpret(interpret)
+        bi, bj, bm = plan.bi, plan.bj, plan.bm
         d_pad = _round_up(d, max(bi, bj))
         m_pad = _round_up(m, bm)
         xt = jnp.pad(
@@ -102,7 +129,7 @@ def pairwise_moments(
             xt, c_pad, m_total=m, bi=bi, bj=bj, bm=bm, interpret=interpret
         )
         return m1[:d, :d], m2[:d, :d]
-    raise ValueError(f"unknown backend: {backend}")
+    raise ValueError(f"unknown backend: {plan.backend}")
 
 
 def pairwise_moment_sums_rows(
@@ -112,8 +139,10 @@ def pairwise_moment_sums_rows(
     tile: int,
     *,
     chunk: int = 512,
-    backend: str = _DEFAULT_BACKEND,
-    interpret: bool = True,
+    backend: str = None,
+    interpret: bool = None,
+    tune_mode: str = _DEFAULT_TUNE,
+    plan: tune.Plan = None,
 ):
     """Pairwise residual moment *sums* for the i-row tile
     ``[row_start, row_start + tile)`` against all columns — the
@@ -134,22 +163,48 @@ def pairwise_moment_sums_rows(
       ``blocked`` scans over sample chunks (pure jnp); ``pallas`` runs
       the paper's kernel on the local slab (row-tile variant) — the
       kernel composed with ``shard_map`` is the full multi-pod
-      configuration.
+      configuration. Row-tile block shapes come from the dispatcher
+      (``Partition.chunk`` bounds the sample block); non-divisible
+      extents are zero-padded here and masked in the kernel.
     """
     m_local, d = x_std.shape
-    if backend == "pallas":
-        xt_all = x_std.T  # (d, m_local); caller guarantees padding
+    if plan is None:
+        plan = tune.dispatch(
+            "pairwise_moment_sums_rows", (tile, d, m_local),
+            str(x_std.dtype), backend, mode=tune_mode, chunk=chunk,
+        )
+    if plan.backend == "pallas":
+        interpret = tune.resolve_interpret(interpret)
+        bi = plan.bi if plan.bi and tile % plan.bi == 0 else (
+            8 if tile % 8 == 0 else 1
+        )
+        bj = plan.bj if plan.bj and d % plan.bj == 0 else None
+        bm = plan.bm if plan.bm else (
+            chunk if m_local % chunk == 0 else m_local
+        )
+        d_pad = d if bj else _round_up(d, 8 if d >= 8 else 1)
+        m_pad = _round_up(m_local, bm)
+        xt_all = x_std.T  # (d, m_local)
+        c_full = c
+        if d_pad != d or m_pad != m_local:
+            # Pad variables/samples to block multiples: padded columns
+            # are sliced back off below, padded samples are masked via
+            # m_total (and contribute exact zeros to the sub-sums).
+            xt_all = jnp.pad(
+                xt_all, ((0, d_pad - d), (0, m_pad - m_local))
+            )
+            c_full = jnp.pad(c, ((0, d_pad - d), (0, d_pad - d)))
+        if bj is None:
+            bj = 8 if d_pad % 8 == 0 else 1
         xt_rows = jax.lax.dynamic_slice_in_dim(xt_all, row_start, tile, 0)
-        c_rows = jax.lax.dynamic_slice_in_dim(c, row_start, tile, 0)
-        bi = 8 if tile % 8 == 0 else 1
-        bj = 128 if d % 128 == 0 else (8 if d % 8 == 0 else 1)
-        bm = chunk if m_local % chunk == 0 else m_local
-        return pairwise_stats.pairwise_moment_sums_rows(
+        c_rows = jax.lax.dynamic_slice_in_dim(c_full, row_start, tile, 0)
+        s1, s2 = pairwise_stats.pairwise_moment_sums_rows(
             xt_rows, xt_all, c_rows, m_total=m_local,
             bi=bi, bj=bj, bm=bm, interpret=interpret,
         )
-    if backend != "blocked":
-        raise ValueError(f"unknown backend: {backend}")
+        return s1[:, :d], s2[:, :d]
+    if plan.backend != "blocked":
+        raise ValueError(f"unknown backend: {plan.backend}")
     xt = x_std.T  # (d, m_local)
     c_rows = jax.lax.dynamic_slice_in_dim(c, row_start, tile, 0)  # (tile, d)
     inv_std = jax.lax.rsqrt(jnp.maximum(1.0 - c_rows * c_rows, ref.EPS))
@@ -186,18 +241,22 @@ def pairwise_moment_sums_chunked(
     c,
     *,
     chunk: int = 512,
-    backend: str = _DEFAULT_BACKEND,
-    interpret: bool = True,
+    backend: str = None,
+    interpret: bool = None,
+    tune_mode: str = _DEFAULT_TUNE,
+    plan: tune.Plan = None,
 ):
     """Pairwise residual moment *sums* accumulated over sample chunks.
 
     The streaming entry point: scans ``x_std`` in (chunk, d) sample
     slabs and accumulates the (d, d) moment sums of each slab via
     :func:`pairwise_moment_sums_rows` (the Pallas row-tile kernel for
-    ``backend="pallas"``, the chunked jnp scan otherwise), so the peak
+    the pallas variant, the chunked jnp scan otherwise), so the peak
     residual intermediate is O(chunk * d^2) instead of O(m * d^2) — a
     rolling window's moments cost one chunk of live memory regardless
-    of window length.
+    of window length. ``chunk`` is the caller's memory bound and fixes
+    the outer accumulation grouping; the dispatcher tunes the blocks
+    *within* each slab (bit-identical by the parity contract).
 
     Args:
       x_std: (m, d) data standardized by the *window's* statistics.
@@ -210,16 +269,21 @@ def pairwise_moment_sums_chunked(
     """
     m, d = x_std.shape
     chunk = max(1, min(chunk, m))
-    if backend != "pallas":
+    if plan is None:
+        plan = tune.dispatch(
+            "pairwise_moment_sums_chunked", (m, d), str(x_std.dtype),
+            backend, mode=tune_mode, chunk=chunk,
+        )
+    inner_plan = dataclasses.replace(plan, op="pairwise_moment_sums_rows")
+    if plan.backend != "pallas":
         # The row-tile entry already scans masked (chunk, d) slabs over
         # the full row range for the jnp backend.
         return pairwise_moment_sums_rows(
-            x_std, c, 0, d, chunk=chunk, backend=backend,
-            interpret=interpret,
+            x_std, c, 0, d, chunk=chunk, backend=plan.backend,
+            interpret=interpret, plan=inner_plan,
         )
-    # Pallas path: the kernel wants a chunk-divisible sample axis, so
-    # pad with zero rows (both integrands vanish at 0) and scan the
-    # row-tile kernel over chunk slabs.
+    # Pallas path: scan the row-tile kernel over chunk slabs; pad the
+    # sample axis with zero rows (both integrands vanish at 0).
     m_pad = _round_up(m, chunk)
     x = jnp.pad(x_std.astype(jnp.float32), ((0, m_pad - m), (0, 0)))
     n_chunks = m_pad // chunk
@@ -228,7 +292,8 @@ def pairwise_moment_sums_chunked(
         s1, s2 = carry
         xs = jax.lax.dynamic_slice_in_dim(x, k * chunk, chunk, 0)
         t1, t2 = pairwise_moment_sums_rows(
-            xs, c, 0, d, chunk=chunk, backend=backend, interpret=interpret
+            xs, c, 0, d, chunk=chunk, backend=plan.backend,
+            interpret=interpret, plan=inner_plan,
         )
         return (s1 + t1, s2 + t2), None
 
@@ -241,15 +306,18 @@ def pairwise_moment_sums_chunked(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("chunk", "backend", "interpret")
+    jax.jit, static_argnames=("chunk", "backend", "interpret", "tune_mode",
+                              "plan")
 )
 def pairwise_moments_chunked(
     x_std,
     c,
     *,
     chunk: int = 512,
-    backend: str = _DEFAULT_BACKEND,
-    interpret: bool = True,
+    backend: str = None,
+    interpret: bool = None,
+    tune_mode: str = _DEFAULT_TUNE,
+    plan: tune.Plan = None,
 ):
     """Chunk-accumulated pairwise moment *means*: sums / m.
 
@@ -260,33 +328,63 @@ def pairwise_moments_chunked(
     """
     m, _ = x_std.shape
     s1, s2 = pairwise_moment_sums_chunked(
-        x_std, c, chunk=chunk, backend=backend, interpret=interpret
+        x_std, c, chunk=chunk, backend=backend, interpret=interpret,
+        tune_mode=tune_mode, plan=plan,
     )
     inv_m = jnp.float32(1.0 / m)
     return s1 * inv_m, s2 * inv_m
 
 
-def _pick_blocks(d: int, m: int):
-    """Heuristic block shapes: MXU/VPU-aligned, VMEM-bounded.
+def fused_moment_rows(
+    x_raw,
+    mu,
+    rstd,
+    c,
+    row_start: int,
+    tile: int,
+    *,
+    interpret: bool = None,
+    tune_mode: str = _DEFAULT_TUNE,
+    plan: tune.Plan = None,
+):
+    """Dispatcher-planned wrapper over the fused standardize+moments
+    kernel (:func:`repro.kernels.fused_stats.fused_moment_sums`).
 
-    The (BI, BJ, BM) intermediate is the VMEM working set:
-    BI*BM + BJ*BM + 2*BI*BJ*BM fp32 words. Defaults keep it < 4.5 MiB
-    (half of a v5e core's 16 MiB VMEM, leaving room for double-buffered
-    input streams).
+    Takes *raw* sample-major data plus the per-variable standardization
+    constants, pads every extent to the plan's block multiples (padded
+    samples are masked in the kernel; padded variables are sliced back
+    off), and returns the (tile, d) moment *sums* for rows
+    ``[row_start, row_start + tile)``. ``row_start`` is a host int here
+    (the mesh path slices its tile before calling the kernel).
     """
-    if d >= 128:
-        bi, bj = 8, 128  # lane-aligned j tile
-    elif d >= 8:
-        bi = bj = 8
-    else:
-        bi = bj = 8  # tiny d still padded to 8
-    if m >= 4096:
-        bm = 2048
-    elif m >= 512:
-        bm = 512
-    else:
-        bm = 256
-    return bi, bj, bm
+    from .fused_stats import fused_moment_sums
+
+    m, d = x_raw.shape
+    if plan is None:
+        plan = tune.dispatch(
+            "fused_moment_sums", (tile, d, m), str(x_raw.dtype),
+            "pallas", mode=tune_mode,
+        )
+    interpret = tune.resolve_interpret(interpret)
+    bi, bj, bm = plan.bi, plan.bj, plan.bm
+    tile_pad = _round_up(tile, bi)
+    # The row slice must fit inside the padded variable extent even when
+    # the tile straddles the end of the real rows.
+    d_pad = _round_up(max(d, row_start + tile_pad), bj)
+    m_pad = _round_up(m, bm)
+    xt = jnp.pad(x_raw.T, ((0, d_pad - d), (0, m_pad - m)))
+    mu_pad = jnp.pad(mu.astype(jnp.float32), (0, d_pad - d))
+    rstd_pad = jnp.pad(rstd.astype(jnp.float32), (0, d_pad - d))
+    c_pad = jnp.pad(
+        c.astype(jnp.float32), ((0, d_pad - d), (0, d_pad - d))
+    )
+    row_slice = slice(row_start, row_start + tile_pad)
+    s1, s2 = fused_moment_sums(
+        xt[row_slice], xt, mu_pad[row_slice], mu_pad,
+        rstd_pad[row_slice], rstd_pad, c_pad[row_slice],
+        m_total=m, bi=bi, bj=bj, bm=bm, interpret=interpret,
+    )
+    return s1[:tile, :d], s2[:tile, :d]
 
 
 def standardize(x, eps=ref.EPS):

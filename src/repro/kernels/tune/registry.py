@@ -1,0 +1,450 @@
+"""Kernel variant registry + the single block-shape decision point.
+
+Every moment-kernel entry point in the repo (the Pallas pair-tile and
+row-tile kernels, the fused standardize+moments kernel, the blocked jnp
+fallback and the chunked wrappers) is wrapped here as a
+:class:`KernelVariant` with declared constraints — sublane/lane
+alignment, the VMEM working-set model, sample-axis accumulation
+granularity, mesh compatibility. :func:`dispatch` is the **only** place
+a ``(bi, bj, bm)`` / row-block decision is made: the wrappers in
+``repro.kernels.ops`` (and through them the local, vmap, mesh, and
+stream execution plans) all ask it for a :class:`Plan`.
+
+Resolution order inside ``dispatch``:
+
+  1. explicit ``plan`` overrides win (the autotuner measuring a
+     candidate, a test pinning a shape);
+  2. with ``mode="cache"`` (default) or ``"auto"``, the persistent
+     tuning table (:mod:`repro.kernels.tune.cache`) is consulted under
+     the versioned ``(device_kind, op, dtype, shape-bucket)`` key; a hit
+     is validated against the variant's constraints for the *actual*
+     shape before use;
+  3. ``mode="auto"`` runs the timed search on a miss (once per bucket,
+     persisted to the user overlay);
+  4. otherwise — and always for ``mode="off"`` — the deterministic
+     heuristic (the old ``ops._pick_blocks`` logic, folded in here).
+
+**Bit-parity contract.** Tuned and heuristic plans for the same op
+produce bit-identical moment outputs: block shapes only re-tile the
+(i, j) pair space (per-element arithmetic untouched), and the kernels
+accumulate the sample axis in fixed :data:`ACCUM_CHUNK`-wide sub-chunks,
+so any ``bm`` that is a multiple of ``ACCUM_CHUNK`` yields the same fp32
+reduction order (zero-padded tails add exact ``+0.0``). The candidate
+generator only emits such ``bm``; ``tests/test_tune.py`` pins the
+parity.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, Optional, Tuple
+
+from . import cache as tune_cache
+
+#: Sample-axis accumulation granularity shared with the Pallas kernels
+#: (``pairwise_stats`` / ``fused_stats``): any bm that is a multiple of
+#: this produces a bit-identical reduction order (lane width, fp32).
+ACCUM_CHUNK = 128
+
+_SUBLANE = 8      # fp32 second-to-last-dim tile
+_LANE = 128       # last-dim tile / VPU lane width
+_VMEM_BUDGET = int(4.5 * 1024 * 1024)  # bytes; see vmem_bytes()
+
+_MODES = ("off", "cache", "auto")
+
+
+def _round_up(x: int, k: int) -> int:
+    return ((x + k - 1) // k) * k
+
+
+def _trace_state_clean() -> bool:
+    """True when no jax trace is active. The timed search must not run
+    mid-trace: the candidate runs execute eagerly there, but the wall
+    times absorb tracing overhead and would persist distorted plans —
+    inside a trace, ``mode="auto"`` degrades to the heuristic and the
+    search is deferred to an eager dispatch point (engine warm-up, the
+    bench harness, a direct ops call)."""
+    import jax
+
+    try:
+        return jax.core.trace_state_clean()
+    except AttributeError:  # pragma: no cover - future jax versions
+        return True
+
+
+def vmem_bytes(bi: int, bj: int, bm: int) -> int:
+    """fp32 VMEM working set of one (BI, BJ, BM) grid cell: the two
+    streamed input blocks plus the two (BI, BJ, BM) moment
+    intermediates (residual/nonlinearity tensors)."""
+    return 4 * (bi * bm + bj * bm + 2 * bi * bj * bm)
+
+
+@functools.lru_cache(maxsize=1)
+def default_interpret() -> bool:
+    """Pallas interpreter only when no accelerator backs the process —
+    real hardware must never silently run interpret mode."""
+    import jax
+
+    return jax.default_backend() == "cpu"
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    return default_interpret() if interpret is None else bool(interpret)
+
+
+@functools.lru_cache(maxsize=1)
+def default_backend() -> str:
+    """Backend when the caller does not force one: the Pallas kernels on
+    an accelerator, the blocked jnp fallback elsewhere."""
+    return "pallas" if not default_interpret() else "blocked"
+
+
+@functools.lru_cache(maxsize=1)
+def device_kind() -> str:
+    import jax
+
+    return jax.devices()[0].device_kind
+
+
+@dataclasses.dataclass(frozen=True)
+class Constraints:
+    """Declared execution constraints of one kernel variant."""
+
+    sublane: int = _SUBLANE        # bi (and bj) alignment quantum
+    lane: int = _LANE              # preferred bj / bm alignment
+    accum_chunk: int = ACCUM_CHUNK  # bm granularity for bit-stable sums
+    vmem_budget: int = _VMEM_BUDGET  # working-set bound for candidates
+    mesh_compatible: bool = True   # usable inside shard_map row tiles
+    tunable: Tuple[str, ...] = ()  # which Plan fields the search may vary
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """One block-shape/variant decision. Hashable (jit-static) and
+    serializable (tuning table rows are its dict form)."""
+
+    op: str
+    variant: str
+    backend: str
+    bi: int = 0
+    bj: int = 0
+    bm: int = 0
+    block: int = 0      # row block of the blocked jnp backend
+    source: str = "heuristic"  # "heuristic" | "tuned" | "override"
+
+    def to_entry(self) -> dict:
+        return {
+            "variant": self.variant,
+            "backend": self.backend,
+            "bi": self.bi,
+            "bj": self.bj,
+            "bm": self.bm,
+            "block": self.block,
+        }
+
+    @classmethod
+    def from_entry(cls, op: str, entry: dict) -> "Plan":
+        return cls(
+            op=op,
+            variant=str(entry.get("variant", "")),
+            backend=str(entry.get("backend", "")),
+            bi=int(entry.get("bi", 0)),
+            bj=int(entry.get("bj", 0)),
+            bm=int(entry.get("bm", 0)),
+            block=int(entry.get("block", 0)),
+            source="tuned",
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelVariant:
+    """A registered kernel entry point with its constraints and its
+    deterministic fallback plan."""
+
+    name: str
+    op: str
+    backend: str
+    constraints: Constraints
+    heuristic: Callable[..., Plan]  # (shape, chunk) -> Plan
+    validate: Callable[..., bool]   # (plan, shape, chunk) -> bool
+
+
+REGISTRY: Dict[Tuple[str, str], KernelVariant] = {}
+
+
+def register(variant: KernelVariant) -> KernelVariant:
+    key = (variant.op, variant.backend)
+    if key in REGISTRY:
+        raise ValueError(f"duplicate kernel variant for {key}")
+    REGISTRY[key] = variant
+    return variant
+
+
+def get_variant(op: str, backend: str) -> KernelVariant:
+    try:
+        return REGISTRY[(op, backend)]
+    except KeyError:
+        raise ValueError(
+            f"no kernel variant registered for op={op!r} "
+            f"backend={backend!r}; known: {sorted(REGISTRY)}"
+        ) from None
+
+
+# ---------------------------------------------------------------------------
+# Heuristics (the old static decisions, folded into the fallback path)
+# ---------------------------------------------------------------------------
+
+
+def heuristic_pair_blocks(d: int, m: int) -> Tuple[int, int, int]:
+    """MXU/VPU-aligned pair-tile block shapes, VMEM-bounded.
+
+    The (BI, BJ, BM) intermediate is the VMEM working set (see
+    :func:`vmem_bytes`); these defaults are the legacy
+    ``ops._pick_blocks`` heuristic with its duplicate ``d >= 8`` /
+    ``else`` branches collapsed (both returned 8 — tiny d is padded up
+    to one sublane tile anyway).
+    """
+    bi, bj = (8, 128) if d >= 128 else (8, 8)
+    if m >= 4096:
+        bm = 2048
+    elif m >= 512:
+        bm = 512
+    else:
+        bm = 256
+    return bi, bj, bm
+
+
+def _pair_pallas_heuristic(shape, chunk=None) -> Plan:
+    m, d = shape
+    bi, bj, bm = heuristic_pair_blocks(d, m)
+    return Plan(
+        op="pairwise_moments", variant="pallas-pair-tile",
+        backend="pallas", bi=bi, bj=bj, bm=bm,
+    )
+
+
+def _pair_blocked_heuristic(shape, chunk=None) -> Plan:
+    m, d = shape
+    block = min(64, _round_up(max(d, 1), _SUBLANE))
+    return Plan(
+        op="pairwise_moments", variant="blocked-rows",
+        backend="blocked", block=block,
+    )
+
+
+def _rows_pallas_heuristic(shape, chunk=None) -> Plan:
+    tile, d, m = shape
+    bi = _SUBLANE if tile % _SUBLANE == 0 else 1
+    bj = _LANE if d % _LANE == 0 else (_SUBLANE if d % _SUBLANE == 0 else 1)
+    bm = chunk if chunk and m % chunk == 0 else m
+    return Plan(
+        op="pairwise_moment_sums_rows", variant="pallas-row-tile",
+        backend="pallas", bi=bi, bj=bj, bm=bm,
+    )
+
+
+def _rows_blocked_heuristic(shape, chunk=None) -> Plan:
+    # chunk is the caller's memory bound (Partition.chunk / stream
+    # chunk); the jnp scan grouping follows it, so it is not tunable —
+    # re-grouping would break the chunk-count-invariant sums.
+    return Plan(
+        op="pairwise_moment_sums_rows", variant="rows-chunked-jnp",
+        backend="blocked", bm=int(chunk or 512),
+    )
+
+
+def _chunked_heuristic(backend, name):
+    def h(shape, chunk=None) -> Plan:
+        m, d = shape
+        inner = dispatch_heuristic(
+            "pairwise_moment_sums_rows", (d, d, int(chunk or 512)),
+            backend=backend, chunk=chunk,
+        )
+        return dataclasses.replace(
+            inner, op="pairwise_moment_sums_chunked", variant=name,
+        )
+    return h
+
+
+def _fused_pallas_heuristic(shape, chunk=None) -> Plan:
+    tile, d, m = shape
+    bi = _SUBLANE
+    bj = _LANE if d >= _LANE else _SUBLANE
+    bm = 512 if m >= 512 else 256
+    return Plan(
+        op="fused_moment_sums", variant="pallas-fused",
+        backend="pallas", bi=bi, bj=bj, bm=bm,
+    )
+
+
+def _validate_pallas(plan: Plan, shape, chunk=None) -> bool:
+    """A tuned Pallas plan is admissible for this shape when its blocks
+    are aligned, bit-stable (bm a multiple of the accumulation chunk)
+    and within the chunk memory bound when one applies. Divisibility is
+    *not* required — the ops wrappers pad to the plan's blocks."""
+    if plan.bi < 1 or plan.bj < 1 or plan.bm < 1:
+        return False
+    if plan.bi % _SUBLANE or plan.bj % _SUBLANE:
+        return False
+    if plan.bm % ACCUM_CHUNK:
+        return False
+    if chunk and plan.bm > chunk:
+        return False
+    return True
+
+
+def _validate_blocked(plan: Plan, shape, chunk=None) -> bool:
+    return plan.block >= 1 and plan.block % _SUBLANE == 0
+
+
+def _validate_fixed(plan: Plan, shape, chunk=None) -> bool:
+    return False  # nothing tunable: heuristic only
+
+
+register(KernelVariant(
+    name="pallas-pair-tile",
+    op="pairwise_moments",
+    backend="pallas",
+    constraints=Constraints(
+        mesh_compatible=False, tunable=("bi", "bj", "bm")
+    ),
+    heuristic=_pair_pallas_heuristic,
+    validate=_validate_pallas,
+))
+register(KernelVariant(
+    name="blocked-rows",
+    op="pairwise_moments",
+    backend="blocked",
+    constraints=Constraints(tunable=("block",)),
+    heuristic=_pair_blocked_heuristic,
+    validate=_validate_blocked,
+))
+register(KernelVariant(
+    name="ref-oracle",
+    op="pairwise_moments",
+    backend="ref",
+    constraints=Constraints(mesh_compatible=False, tunable=()),
+    heuristic=lambda shape, chunk=None: Plan(
+        op="pairwise_moments", variant="ref-oracle", backend="ref"
+    ),
+    validate=_validate_fixed,
+))
+register(KernelVariant(
+    name="pallas-row-tile",
+    op="pairwise_moment_sums_rows",
+    backend="pallas",
+    constraints=Constraints(tunable=("bi", "bj", "bm")),
+    heuristic=_rows_pallas_heuristic,
+    validate=_validate_pallas,
+))
+register(KernelVariant(
+    name="rows-chunked-jnp",
+    op="pairwise_moment_sums_rows",
+    backend="blocked",
+    constraints=Constraints(tunable=()),
+    heuristic=_rows_blocked_heuristic,
+    validate=_validate_fixed,
+))
+register(KernelVariant(
+    name="chunked-pallas-row-tile",
+    op="pairwise_moment_sums_chunked",
+    backend="pallas",
+    constraints=Constraints(tunable=("bi", "bj")),
+    heuristic=_chunked_heuristic("pallas", "chunked-pallas-row-tile"),
+    validate=_validate_pallas,
+))
+register(KernelVariant(
+    name="chunked-rows-jnp",
+    op="pairwise_moment_sums_chunked",
+    backend="blocked",
+    constraints=Constraints(tunable=()),
+    heuristic=_chunked_heuristic("blocked", "chunked-rows-jnp"),
+    validate=_validate_fixed,
+))
+register(KernelVariant(
+    name="pallas-fused",
+    op="fused_moment_sums",
+    backend="pallas",
+    constraints=Constraints(tunable=("bi", "bj", "bm")),
+    heuristic=_fused_pallas_heuristic,
+    validate=_validate_pallas,
+))
+
+
+# ---------------------------------------------------------------------------
+# Dispatch
+# ---------------------------------------------------------------------------
+
+
+def dispatch_heuristic(
+    op: str, shape, *, backend: Optional[str] = None, chunk: Optional[int] = None
+) -> Plan:
+    """The deterministic fallback plan (no table, no measurement)."""
+    backend = backend or default_backend()
+    return get_variant(op, backend).heuristic(shape, chunk)
+
+
+def dispatch(
+    op: str,
+    shape,
+    dtype: str = "float32",
+    backend: Optional[str] = None,
+    *,
+    mode: str = "cache",
+    chunk: Optional[int] = None,
+    mesh: bool = False,
+    table: Optional[tune_cache.TuneTable] = None,
+) -> Plan:
+    """The single block-shape/variant decision point.
+
+    Args:
+      op:     registered op name ("pairwise_moments",
+              "pairwise_moment_sums_rows", "pairwise_moment_sums_chunked",
+              "fused_moment_sums").
+      shape:  static dispatch shape — (m, d) for the pair ops,
+              (tile, d, m) for the row/fused ops. Called at trace time,
+              where these are Python ints.
+      dtype:  input dtype token (part of the tuning key).
+      backend: force a backend ("blocked"/"pallas"/"ref"); None lets the
+              registry pick (pallas on accelerators, blocked otherwise).
+      mode:   "off" (heuristic, deterministic — the offline mode),
+              "cache" (tuned table lookup, heuristic fallback; never
+              measures), "auto" (search + persist on a miss).
+      chunk:  caller's sample-chunk memory bound, when one applies.
+      mesh:   require a mesh-compatible (shard_map-safe) variant.
+      table:  explicit :class:`TuneTable` (tests/benchmarks); defaults
+              to the process singleton.
+    """
+    if mode not in _MODES:
+        raise ValueError(f"unknown tune mode {mode!r}; expected {_MODES}")
+    backend = backend or default_backend()
+    variant = get_variant(op, backend)
+    if mesh and not variant.constraints.mesh_compatible:
+        raise ValueError(
+            f"variant {variant.name!r} is not mesh-compatible "
+            f"(op={op!r}, backend={backend!r})"
+        )
+    if mode == "off" or not variant.constraints.tunable:
+        return variant.heuristic(shape, chunk)
+
+    tbl = table if table is not None else tune_cache.get_table()
+    key = tune_cache.plan_key(
+        device_kind(), op, backend, dtype, tune_cache.shape_bucket(op, shape)
+    )
+    entry = tbl.lookup(key)
+    if entry is not None:
+        plan = Plan.from_entry(op, entry)
+        if plan.backend == backend and variant.validate(plan, shape, chunk):
+            return plan
+        # A recorded plan that fails validation for this shape degrades
+        # to the heuristic — deterministically, with no re-search loop.
+        return variant.heuristic(shape, chunk)
+    if mode == "auto" and not tbl.offline and _trace_state_clean():
+        from . import autotune  # lazy: autotune drives the ops wrappers
+
+        tuned = autotune.autotune_op(
+            op, shape, dtype=dtype, backend=backend, chunk=chunk, table=tbl
+        )
+        return tuned.best
+    return variant.heuristic(shape, chunk)

@@ -142,14 +142,58 @@ class CausalDiscoveryEngine:
     ``fit_many_from_stats`` with the same shape-bucketed padding
     discipline as the one-shot path. ``post_chunk`` auto-flushes once a
     full micro-batch of sessions is due.
+
+    ``warmup(shapes)`` pre-resolves the kernel block plans (running the
+    autotuner's timed search when the config says ``tune="auto"``) and
+    pre-compiles the fit programs for the expected dataset shapes, so
+    first requests pay neither a plan search nor a compile.
     """
 
     def __init__(self, config: Optional[lingam_api.FitConfig] = None,
-                 *, batch_size: int = 8):
+                 *, batch_size: int = 8,
+                 warmup_shapes: Optional[List[Tuple[int, int]]] = None):
         self.config = config or lingam_api.FitConfig(compaction="staged")
         self.batch_size = batch_size
         self._streams: Dict[str, stream_session.StreamSession] = {}
         self._next_sid = 0
+        if warmup_shapes:
+            self.warmup(warmup_shapes)
+
+    def warmup(
+        self,
+        shapes: List[Tuple[int, int]],
+        *,
+        tune_mode: Optional[str] = None,
+        compile: bool = True,
+    ) -> Dict[str, object]:
+        """Pre-resolve kernel plans (and pre-compile the fit programs)
+        for the (m, d) dataset shapes this engine expects.
+
+        With ``tune_mode="auto"`` (or ``FitConfig(tune="auto")``) the
+        block-shape search runs *now*, per shape bucket, and persists to
+        the user-local tuning overlay — so neither one-shot requests nor
+        streaming refits ever pay a first-request search. Returns the
+        resolved plans keyed by their tuning-table keys.
+        """
+        from repro.kernels.tune import autotune as ktune_autotune
+
+        mode = tune_mode or self.config.tune
+        # The fit path only routes through the chunked op when the
+        # config bounds the moment pass; warm exactly what it will ask.
+        warm_ops = ("pairwise_moments",) if (
+            self.config.moment_chunk is None
+        ) else ("pairwise_moments", "pairwise_moment_sums_chunked")
+        plans = ktune_autotune.warmup_plans(
+            shapes,
+            ops=warm_ops,
+            backend=self.config.backend,
+            mode=mode,
+            chunk=self.config.moment_chunk,
+        )
+        if compile and self.config.partition is None:
+            for shape in shapes:
+                lingam_batched.warmup_fit_many(shape, self.config)
+        return plans
 
     def _bucket(self, n: int) -> int:
         b = 1

@@ -90,6 +90,102 @@ def test_bf16_input_upcast():
     _offdiag_close(m1r, m1p, d, atol=1e-2)
 
 
+# Padding edges: tile / d / m just above and below the block multiples
+# (bi=8, bj=8, bm=128/256), pinned against the blocked-oracle sums. The
+# ops wrappers pad to the plan's blocks and mask/slice the excess; these
+# cells would silently corrupt the edge rows/columns if the padding or
+# the m_total mask were off by one.
+_EDGE_CELLS = [
+    # (tile, d, m): d and m straddle block multiples; tile straddles bi.
+    (7, 9, 127),    # all just below/above the 8/128 quanta
+    (8, 16, 129),   # m one past a bm sub-chunk
+    (9, 15, 255),   # tile just above bi, m just below 2*128
+    (8, 17, 257),   # d one past 2*8, m one past 2*128
+    (16, 16, 128),  # exact multiples (no-padding control cell)
+]
+
+
+def _rows_oracle_sums(xs, c, tile):
+    """Blocked-oracle row sums: means * m, first `tile` rows."""
+    m = xs.shape[0]
+    m1r, m2r = ref.pairwise_moments_ref(xs, c)
+    return np.asarray(m1r)[:tile] * m, np.asarray(m2r)[:tile] * m
+
+
+@pytest.mark.parametrize("tile,d,m", _EDGE_CELLS)
+def test_rows_padding_edges_vs_blocked_oracle(tile, d, m):
+    from repro.kernels.tune import Plan
+
+    xs, c = _make(m, d)
+    s1r, s2r = _rows_oracle_sums(xs, c, tile)
+    # force a plan whose blocks do NOT divide the shape, so the wrapper
+    # must pad every axis and mask the sample tail
+    plan = Plan(
+        op="pairwise_moment_sums_rows", variant="pallas-row-tile",
+        backend="pallas", bi=8, bj=8, bm=128, source="override",
+    )
+    s1, s2 = ops.pairwise_moment_sums_rows(
+        xs, c, 0, tile, backend="pallas", interpret=True, plan=plan
+    )
+    assert s1.shape == (tile, d)
+    mask = 1.0 - np.eye(tile, d)
+    np.testing.assert_allclose(
+        np.asarray(s1) * mask, s1r * mask, atol=2e-6 * m, rtol=0
+    )
+    np.testing.assert_allclose(
+        np.asarray(s2) * mask, s2r * mask, atol=2e-6 * m, rtol=0
+    )
+    # the blocked backend is exact at the same cells (chunk > m forces
+    # a single padded slab)
+    b1, b2 = ops.pairwise_moment_sums_rows(
+        xs, c, 0, tile, chunk=64, backend="blocked"
+    )
+    np.testing.assert_allclose(
+        np.asarray(b1) * mask, s1r * mask, atol=2e-6 * m, rtol=0
+    )
+
+
+@pytest.mark.parametrize("tile,d,m", _EDGE_CELLS)
+def test_fused_padding_edges_vs_blocked_oracle(tile, d, m):
+    from repro.kernels.tune import Plan
+
+    x = RNG.laplace(size=(m, d)).astype(np.float32)
+    xj = jnp.asarray(x)
+    xs = ops.standardize(xj)
+    c = ops.correlation(xs)
+    s1r, s2r = _rows_oracle_sums(xs, c, tile)
+    mu = jnp.mean(xj, axis=0)
+    rstd = 1.0 / jnp.maximum(jnp.std(xj, axis=0), 1e-12)
+    plan = Plan(
+        op="fused_moment_sums", variant="pallas-fused",
+        backend="pallas", bi=8, bj=8, bm=256, source="override",
+    )
+    s1, s2 = ops.fused_moment_rows(
+        xj, mu, rstd, c, 0, tile, interpret=True, plan=plan
+    )
+    assert s1.shape == (tile, d)
+    mask = 1.0 - np.eye(tile, d)
+    np.testing.assert_allclose(
+        np.asarray(s1) * mask, s1r * mask, atol=4e-6 * m, rtol=0
+    )
+    np.testing.assert_allclose(
+        np.asarray(s2) * mask, s2r * mask, atol=4e-6 * m, rtol=0
+    )
+
+
+def test_chunked_padding_edge_vs_oracle():
+    """Chunk-accumulated sums at a non-divisible window length."""
+    m, d = 333, 10
+    xs, c = _make(m, d)
+    m1r, m2r = ref.pairwise_moments_ref(xs, c)
+    for backend in ("blocked", "pallas"):
+        m1, m2 = ops.pairwise_moments_chunked(
+            xs, c, chunk=128, backend=backend, interpret=True
+        )
+        _offdiag_close(m1r, m1, d, atol=2e-6)
+        _offdiag_close(m2r, m2, d, atol=2e-6)
+
+
 @pytest.mark.parametrize("dtype", [np.float32, "bfloat16"])
 def test_fused_kernel_matches_oracle(dtype):
     """Fused standardize+moments kernel (raw X in, optional bf16 streaming)
