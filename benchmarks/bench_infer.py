@@ -1,0 +1,167 @@
+"""Causal-query throughput: batched micro-batches vs a per-query loop.
+
+The query subsystem's claim is that a micro-batch of requests against
+same-shape graphs costs one compiled device-parallel program, not b
+sequential dispatches. Measured here per (d, kind):
+
+  * **loop** — one jitted single-query call per request (block until
+    ready each time): the per-query serving baseline.
+  * **batched** — the same requests through
+    :class:`repro.infer.query.QueryEngine` (one ``jit(vmap)`` program
+    per bucket).
+
+Both sides run through the engine — the serving surface a client
+actually hits — so the loop pays its real per-request costs (bucketing,
+host-device transfer, dispatch, result materialization) just like the
+batched path pays its stacking; the bare per-query kernel time is
+recorded alongside (``loop_kernel_s``) as the compute floor. Cells:
+total-effect queries at d in {64, 256}, plus an RCA cell (d=64,
+256-row samples per request). Compile time is excluded from both sides
+(one warm-up pass each); ``BENCH_infer.json`` records the per-query
+times and the batched-vs-loop speedup.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.infer import effects, query
+
+
+def _synthetic_graphs(d: int, n: int, seed: int):
+    """n fitted-graph stand-ins: random strictly-lower-triangular (in a
+    random order) adjacencies — the query path only reads the pytree."""
+    from repro.core import api
+
+    rng = np.random.default_rng(seed)
+    graphs = []
+    for _ in range(n):
+        perm = rng.permutation(d).astype(np.int32)
+        b_ord = np.tril(rng.normal(size=(d, d)) * 0.3, k=-1)
+        inv = np.empty(d, dtype=np.int32)
+        inv[perm] = np.arange(d, dtype=np.int32)
+        b = b_ord[np.ix_(inv, inv)].astype(np.float32)
+        graphs.append(api.FitResult(
+            order=jnp.asarray(perm),
+            adjacency=jnp.asarray(b),
+            resid_var=jnp.ones((d,), jnp.float32),
+        ))
+    return graphs
+
+
+def _time(fn, repeats: int) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(quick: bool = True):
+    dims = (64, 256)
+    n_queries = 32 if quick else 64
+    repeats = 3 if quick else 5
+    rows = []
+
+    @jax.jit
+    def _one_effects(adj, order):
+        return effects.total_effects_impl(adj, order)
+
+    for d in dims:
+        graphs = _synthetic_graphs(d, n_queries, seed=d)
+        engine = query.QueryEngine(batch_size=n_queries)
+
+        # Warm every path (compile excluded from the measurement).
+        jax.block_until_ready(
+            _one_effects(graphs[0].adjacency, graphs[0].order)
+        )
+        engine.run([query.EffectQuery(graph=g) for g in graphs])
+        engine.run([query.EffectQuery(graph=graphs[0])])
+
+        def loop():
+            for g in graphs:
+                engine.run([query.EffectQuery(graph=g)])
+
+        def loop_kernel():
+            for g in graphs:
+                jax.block_until_ready(
+                    _one_effects(g.adjacency, g.order)
+                )
+
+        def batched():
+            engine.run([query.EffectQuery(graph=g) for g in graphs])
+
+        t_loop = _time(loop, repeats)
+        t_kernel = _time(loop_kernel, repeats)
+        t_batched = _time(batched, repeats)
+        speedup = t_loop / t_batched
+        rows.append({
+            "kind": "effects", "d": d, "n_queries": n_queries,
+            "loop_s": t_loop, "loop_kernel_s": t_kernel,
+            "batched_s": t_batched,
+            "per_query_us_loop": 1e6 * t_loop / n_queries,
+            "per_query_us_batched": 1e6 * t_batched / n_queries,
+            "speedup": speedup,
+        })
+        print(f"infer,kind=effects,d={d},n={n_queries},"
+              f"loop_s={t_loop:.4f},kernel_s={t_kernel:.4f},"
+              f"batched_s={t_batched:.4f},speedup={speedup:.2f}")
+
+    # RCA cell: attribution of a row batch per request.
+    d, n_rows = 64, 256
+    graphs = _synthetic_graphs(d, n_queries, seed=1)
+    sample_rows = [
+        np.random.default_rng(i).normal(size=(n_rows, d)).astype(np.float32)
+        for i in range(n_queries)
+    ]
+    engine = query.QueryEngine(batch_size=n_queries)
+
+    def rca_queries():
+        return [
+            query.RCAQuery(graph=g, rows=r, target=0)
+            for g, r in zip(graphs, sample_rows)
+        ]
+
+    engine.run(rca_queries())  # warm-up
+
+    def rca_loop():
+        for q in rca_queries():
+            engine.run([q])
+
+    def rca_batched():
+        engine.run(rca_queries())
+
+    engine.run([rca_queries()[0]])  # warm the singleton bucket too
+    t_loop = _time(rca_loop, repeats)
+    t_batched = _time(rca_batched, repeats)
+    rows.append({
+        "kind": "rca", "d": d, "n_queries": n_queries, "n_rows": n_rows,
+        "loop_s": t_loop, "batched_s": t_batched,
+        "per_query_us_loop": 1e6 * t_loop / n_queries,
+        "per_query_us_batched": 1e6 * t_batched / n_queries,
+        "speedup": t_loop / t_batched,
+    })
+    print(f"infer,kind=rca,d={d},n={n_queries},rows={n_rows},"
+          f"loop_s={t_loop:.4f},batched_s={t_batched:.4f},"
+          f"speedup={t_loop / t_batched:.2f}")
+
+    return {
+        "rows": rows,
+        "speedup_effects": {
+            str(r["d"]): r["speedup"] for r in rows if r["kind"] == "effects"
+        },
+    }
+
+
+if __name__ == "__main__":
+    import os
+    import sys
+
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    run(quick=True)

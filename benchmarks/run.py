@@ -23,6 +23,7 @@ from benchmarks import (  # noqa: E402
     bench_bootstrap,
     bench_equivalence,
     bench_gene,
+    bench_infer,
     bench_models,
     bench_notears,
     bench_sharded,
@@ -43,6 +44,7 @@ BENCHES = {
     "sharded": bench_sharded.run,          # mesh-plan sweep vs 1-dev oracle
     "stream": bench_stream.run,            # rolling-window vs from-scratch
     "tune": bench_tune.run,                # heuristic vs tuned kernel plans
+    "infer": bench_infer.run,              # batched queries vs per-query loop
 }
 
 # Benchmark name -> repo-root artifact stem (BENCH_<stem>.json).

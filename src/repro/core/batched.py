@@ -38,6 +38,18 @@ import jax.numpy as jnp
 from .api import FitConfig, FitResult, fit_impl, fit_impl_from_stats
 
 
+def pow2_bucket(n: int, cap: int) -> int:
+    """Next power of two >= n, capped at ``cap`` — the shared
+    micro-batch padding policy: serving fit batches, query-engine
+    buckets, and RCA sample slabs all round partial batches up to a
+    bounded set of program shapes (log2(cap) + 1 of them) instead of
+    compiling one program per distinct length."""
+    b = 1
+    while b < n:
+        b *= 2
+    return min(b, cap)
+
+
 def _require_local_plan(config: FitConfig, engine: str) -> None:
     if config.partition is not None:
         raise ValueError(
@@ -108,3 +120,27 @@ def bootstrap_fits(x, indices, config: FitConfig = FitConfig()) -> FitResult:
     _require_local_plan(config, "bootstrap_fits")
     xs = jnp.take(x.astype(jnp.float32), indices, axis=0)  # (b, m, d)
     return jax.vmap(lambda xb: fit_impl(xb, config))(xs)
+
+
+@functools.partial(jax.jit, static_argnames=("config", "post"))
+def bootstrap_fits_with(
+    x, indices, config: FitConfig, post
+) -> "tuple[FitResult, object]":
+    """:func:`bootstrap_fits` plus a per-resample in-trace reduction.
+
+    ``post`` (static — pass a module-level function, not a lambda, or
+    every call re-traces) maps each resample's :class:`FitResult` to an
+    arbitrary pytree *inside* the same compiled program, so derived
+    statistics — the query subsystem's total-effect matrices, for one
+    (:func:`repro.infer.effects.bootstrap_effects`) — cost no extra
+    dispatch or host round-trip. Returns ``(batched FitResult, batched
+    post pytree)``.
+    """
+    _require_local_plan(config, "bootstrap_fits_with")
+    xs = jnp.take(x.astype(jnp.float32), indices, axis=0)  # (b, m, d)
+
+    def one(xb):
+        r = fit_impl(xb, config)
+        return r, post(r)
+
+    return jax.vmap(one)(xs)

@@ -1,0 +1,57 @@
+"""Causal query & effect-inference subsystem.
+
+Discovery produces a graph; this package *answers questions* with it.
+Every entry point consumes the functional core's
+:class:`~repro.core.api.FitResult` (or a streaming session's rolling
+estimate) and stays jit/vmap-clean, so single queries, bootstrap
+ensembles, and serving micro-batches all run as compiled device
+programs:
+
+  * :mod:`repro.infer.effects` — total-effect matrices ``(I - B)^-1``
+    via triangular solve in causal order (never a dense inverse),
+    path-specific effects, lag-propagated VAR impulse responses, and
+    bootstrap effect confidence intervals.
+  * :mod:`repro.infer.intervene` — do-operator graph surgery and
+    interventional means/covariances derived from observational
+    moments (including the streaming moment store — no row re-reads).
+  * :mod:`repro.infer.rca` — root-cause attribution of anomalous
+    samples by noise-term decomposition ``e = (I - B) x``, batched
+    over samples with dispatch-routed sample slabs.
+  * :mod:`repro.infer.query` — :class:`~repro.infer.query.QueryEngine`:
+    admits Effect / Intervention / RCA requests against fitted or
+    streaming graphs, buckets them by (shape, kind), and executes each
+    bucket as one compiled device-parallel program
+    (:meth:`repro.serve.engine.CausalDiscoveryEngine.query` is the
+    serving-side entry).
+"""
+
+from .effects import (  # noqa: F401
+    EffectCI,
+    bootstrap_effects,
+    effects_avoiding,
+    effects_through,
+    target_effects_row,
+    total_effects,
+    total_effects_impl,
+    var_irf,
+)
+from .intervene import (  # noqa: F401
+    do_arrays,
+    interventional_from_state,
+    interventional_moments,
+    mutilate,
+    noise_stats,
+)
+from .query import (  # noqa: F401
+    EffectQuery,
+    FittedGraph,
+    InterventionQuery,
+    QueryEngine,
+    RCAQuery,
+)
+from .rca import (  # noqa: F401
+    RCAResult,
+    attribute,
+    noise_scores_impl,
+    noise_terms_impl,
+)

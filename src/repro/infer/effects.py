@@ -1,0 +1,224 @@
+"""Total causal effects from fitted graphs — triangular solves, no inverses.
+
+For a LiNGAM SEM ``x = B x + e`` the total-effect matrix is
+``T = (I - B)^{-1}``: ``T[i, j]`` is the change in ``x_i`` per unit
+exogenous shift of ``x_j``, summed over every directed path. The fit
+guarantees ``B`` is strictly lower triangular *in causal order*, so the
+inverse is never formed densely: :func:`total_effects_impl` permutes
+``B`` into causal order, runs one unit-lower-triangular solve against
+``I``, and permutes back — O(d^3/3) FLOPs, no pivoting, and every step
+is a gather or a solve with batching rules, so the whole thing is
+jit/vmap-clean (the batched engine maps it over bootstrap resamples,
+the query engine over request micro-batches).
+
+Also here:
+
+  * :func:`effects_avoiding` / :func:`effects_through` — path-specific
+    effects by graph surgery: severing the *outgoing* edges of a node
+    set blocks exactly the paths through it, so
+    ``through = total - avoiding``.
+  * :func:`var_irf` — lag-propagated effects of a VarLiNGAM fit: the
+    structural impulse responses ``Psi_h = Phi_h (I - B0)^{-1}`` of the
+    VAR recursion ``Phi_h = sum_tau M_tau Phi_{h-tau}``, as one scan.
+  * :func:`bootstrap_effects` — effect confidence intervals: the
+    batched engine refits every resample *and* its total-effect matrix
+    inside one compiled program
+    (:func:`repro.core.batched.bootstrap_fits_with`), so the CI costs
+    one dispatch more than the edge-probability bootstrap.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import api, batched
+
+
+def _positions(order):
+    """pos[v] = position of variable v in the causal order."""
+    d = order.shape[0]
+    return (
+        jnp.zeros((d,), order.dtype)
+        .at[order]
+        .set(jnp.arange(d, dtype=order.dtype))
+    )
+
+
+def total_effects_impl(adjacency, order):
+    """(d, d) total effects ``(I - B)^{-1}`` via triangular solve.
+
+    ``adjacency`` is the fit's ``B`` (``B[i, j]`` = direct effect of
+    ``x_j`` on ``x_i``), ``order`` its causal order (position p holds
+    the variable index). The diagonal is 1 (every variable moves
+    one-for-one with its own noise term). Unjitted trace body — compose
+    under ``jit``/``vmap`` freely; :func:`total_effects` is the jitted
+    single-result entry.
+    """
+    b = adjacency.astype(jnp.float32)
+    d = b.shape[0]
+    bo = b[order][:, order]  # strictly lower triangular by construction
+    eye = jnp.eye(d, dtype=b.dtype)
+    t_ord = jax.scipy.linalg.solve_triangular(
+        eye - bo, eye, lower=True, unit_diagonal=True
+    )
+    pos = _positions(order)
+    return t_ord[pos][:, pos]
+
+
+@jax.jit
+def total_effects(result: api.FitResult):
+    """Total-effect matrix of one fit: ``T[i, j]`` = total effect of
+    ``x_j`` on ``x_i`` (1 on the diagonal)."""
+    return total_effects_impl(result.adjacency, result.order)
+
+
+def target_effects_row(adjacency, order, target):
+    """One row of the total-effect matrix: ``T[target, :]``.
+
+    A single transposed unit-triangular solve — O(d^2), not the full
+    O(d^3) matrix solve — so per-sample-slab consumers (RCA
+    contribution splits) can recompute it in-trace for free.
+    ``target`` may be a traced index.
+    """
+    b = adjacency.astype(jnp.float32)
+    d = b.shape[0]
+    bo = b[order][:, order]
+    pos = _positions(order)
+    rhs = jax.nn.one_hot(pos[target], d, dtype=b.dtype)
+    z = jax.scipy.linalg.solve_triangular(
+        (jnp.eye(d, dtype=b.dtype) - bo).T, rhs[:, None],
+        lower=False, unit_diagonal=True,
+    )[:, 0]  # z[q] = T_ord[pos[target], q]
+    return z[pos]
+
+
+def effects_avoiding(adjacency, order, blocked):
+    """Total effects along paths avoiding the ``blocked`` node set.
+
+    ``blocked`` is a (d,) bool mask. Severing a node's *outgoing* edges
+    (its column of ``B``) removes exactly the paths that pass through
+    it while leaving paths that merely end there; the mutilated graph
+    keeps the same causal order, so the triangular solve applies
+    unchanged.
+    """
+    b = jnp.where(blocked[None, :], 0.0, adjacency)
+    return total_effects_impl(b, order)
+
+
+def effects_through(adjacency, order, nodes):
+    """Total effects along paths passing through the ``nodes`` set
+    (complement of :func:`effects_avoiding`; zero diagonal)."""
+    return total_effects_impl(adjacency, order) - effects_avoiding(
+        adjacency, order, nodes
+    )
+
+
+def var_irf(b0, order, var_coefs, horizon: int):
+    """Structural impulse responses of a VarLiNGAM fit.
+
+    Args:
+      b0:        (d, d) instantaneous adjacency (``theta_0``).
+      order:     (d,) its causal order.
+      var_coefs: (k, d, d) reduced-form VAR coefficient matrices
+                 ``M_tau`` (``VarLiNGAM.var_coefs_`` /
+                 ``RollingFit.var_coefs``).
+      horizon:   static number of lag steps to propagate.
+
+    Returns:
+      (horizon + 1, d, d) responses: ``irf[h, i, j]`` is the change in
+      ``x_{t+h, i}`` per unit shock to the structural noise ``e_{t, j}``
+      — ``irf[0] = (I - B0)^{-1}`` (instantaneous total effects), later
+      steps propagate through the reduced-form recursion
+      ``Phi_h = sum_tau M_tau Phi_{h-tau}`` as one scan.
+    """
+    b0 = jnp.asarray(b0, jnp.float32)
+    var_coefs = jnp.asarray(var_coefs, jnp.float32)
+    d = b0.shape[0]
+    k = var_coefs.shape[0]
+    a0 = total_effects_impl(b0, order)
+    eye = jnp.eye(d, dtype=b0.dtype)
+    carry0 = jnp.concatenate(
+        [eye[None], jnp.zeros((k - 1, d, d), b0.dtype)], axis=0
+    )
+
+    def step(carry, _):
+        # carry[t] = Phi_{h-1-t}: newest reduced-form response first.
+        phi = jnp.einsum("tij,tjk->ik", var_coefs, carry)
+        return jnp.concatenate([phi[None], carry[:-1]], axis=0), phi
+
+    _, phis = jax.lax.scan(step, carry0, None, length=horizon)
+    phis = jnp.concatenate([eye[None], phis], axis=0)
+    return phis @ a0
+
+
+def _effects_post(result: api.FitResult):
+    """In-trace per-resample hook for ``batched.bootstrap_fits_with``."""
+    return total_effects_impl(result.adjacency, result.order)
+
+
+@dataclasses.dataclass
+class EffectCI:
+    """Bootstrap confidence intervals over the total-effect matrix."""
+
+    mean: np.ndarray    # (d, d) resample mean of T
+    std: np.ndarray     # (d, d)
+    lo: np.ndarray      # (d, d) lower percentile bound
+    hi: np.ndarray      # (d, d) upper percentile bound
+    level: float        # two-sided coverage level of [lo, hi]
+    n_sampling: int
+
+    def covers(self, true_effects) -> np.ndarray:
+        """(d, d) bool: does [lo, hi] contain each true effect?"""
+        t = np.asarray(true_effects)
+        return (self.lo <= t) & (t <= self.hi)
+
+    def significant_effects(self, min_abs: float = 0.0):
+        """[(i, j, mean, lo, hi)] for off-diagonal effects whose CI
+        excludes zero (and |mean| >= min_abs), sorted by |mean|."""
+        d = self.mean.shape[0]
+        sig = ((self.lo > 0) | (self.hi < 0)) & ~np.eye(d, dtype=bool)
+        sig &= np.abs(self.mean) >= min_abs
+        out = [
+            (int(i), int(j), float(self.mean[i, j]),
+             float(self.lo[i, j]), float(self.hi[i, j]))
+            for i, j in np.argwhere(sig)
+        ]
+        return sorted(out, key=lambda t: -abs(t[2]))
+
+
+def bootstrap_effects(
+    x,
+    n_sampling: int = 20,
+    level: float = 0.9,
+    seed: int = 0,
+    config: Optional[api.FitConfig] = None,
+) -> EffectCI:
+    """Effect confidence intervals from one compiled bootstrap program.
+
+    Every resample's refit *and* its total-effect triangular solve run
+    inside the single ``bootstrap_fits_with`` program (same on-device
+    index matrix as ``bootstrap_lingam``, so the resamples match);
+    only the cheap percentile reduction happens host-side.
+    """
+    x = np.asarray(x, dtype=np.float32)
+    m, _ = x.shape
+    cfg = config or api.FitConfig(compaction="staged")
+    indices = batched.resample_indices(seed, n_sampling, m)
+    _, effs = batched.bootstrap_fits_with(x, indices, cfg, _effects_post)
+    effs = np.asarray(effs)
+    alpha = 0.5 * (1.0 - level)
+    lo = np.quantile(effs, alpha, axis=0)
+    hi = np.quantile(effs, 1.0 - alpha, axis=0)
+    return EffectCI(
+        mean=effs.mean(axis=0),
+        std=effs.std(axis=0),
+        lo=lo,
+        hi=hi,
+        level=level,
+        n_sampling=n_sampling,
+    )

@@ -1,0 +1,173 @@
+"""Do-operator surgery: interventional moments from observational ones.
+
+``do(x_S = v)`` on a linear SEM ``x = B x + e`` severs the *incoming*
+edges of every intervened variable (its rows of ``B``) and pins its
+value; the post-intervention distribution then follows from the
+mutilated graph and the noise statistics alone:
+
+    mu' solves (I - B') mu' = c,   c_i = v_i (i in S) else E[e_i]
+    Sigma' = A' D' A'^T,           A' = (I - B')^{-1},
+                                   D' = diag(Var e), zero on S
+
+Both are triangular solves in the fit's causal order (mutilation only
+*removes* edges, so the order still triangularizes ``B'``) — no dense
+inverse, and every function here is jit/vmap-clean: the query engine
+maps them over micro-batches of interventions with dense (d,) do-masks
+so mixed target sets share one compiled program.
+
+The noise statistics come from *observational* moments via
+:func:`noise_stats` — ``E[e] = (I - B) mu`` and
+``Var e = diag((I - B) Sigma (I - B)^T)``. A streaming session's
+incremental moment store already holds ``mu``/``Sigma``
+(:class:`repro.stream.stats.MomentState`), so
+:func:`interventional_from_state` answers interventional queries
+without re-reading a single row.
+"""
+
+from __future__ import annotations
+
+from typing import Mapping, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import api
+
+_VAR_EPS = 0.0  # noise variances may be exactly zero (pinned nodes)
+
+
+def mutilate(adjacency, do_mask):
+    """Graph surgery: sever the incoming edges (rows) of every
+    intervened variable. ``do_mask`` is a (d,) bool mask."""
+    return jnp.where(do_mask[:, None], 0.0, adjacency)
+
+
+def do_arrays(d: int, do: Mapping[int, float]) -> Tuple[np.ndarray, np.ndarray]:
+    """Dense (mask, values) encoding of a ``{var: value}`` intervention.
+
+    Dense (d,) arrays keep every intervention the same shape, so a
+    micro-batch of queries with *different* target sets still executes
+    as one vmapped program (the batching contract the query engine
+    relies on).
+    """
+    mask = np.zeros((d,), bool)
+    values = np.zeros((d,), np.float32)
+    for j, v in do.items():
+        mask[int(j)] = True
+        values[int(j)] = float(v)
+    return mask, values
+
+
+def noise_stats(adjacency, mean, cov):
+    """Structural-noise moments implied by observational moments.
+
+    For ``x = B x + e``: ``E[e] = (I - B) mu`` and (with independent
+    noise, as LiNGAM assumes) ``Var e_i = ((I - B) Sigma (I - B)^T)_ii``.
+    Returns ``(noise_mean (d,), noise_var (d,))``.
+    """
+    b = adjacency.astype(jnp.float32)
+    r = jnp.eye(b.shape[0], dtype=b.dtype) - b
+    noise_mean = r @ mean.astype(jnp.float32)
+    noise_var = jnp.maximum(
+        jnp.einsum("ij,jk,ik->i", r, cov.astype(jnp.float32), r), _VAR_EPS
+    )
+    return noise_mean, noise_var
+
+
+def interventional_mean_impl(adjacency, order, do_mask, do_values, noise_mean):
+    """(d,) post-intervention mean by triangular solve in causal order."""
+    from .effects import _positions
+
+    b = mutilate(adjacency.astype(jnp.float32), do_mask)
+    c = jnp.where(do_mask, do_values, noise_mean).astype(jnp.float32)
+    d = b.shape[0]
+    bo = b[order][:, order]
+    eye = jnp.eye(d, dtype=b.dtype)
+    mu_ord = jax.scipy.linalg.solve_triangular(
+        eye - bo, c[order][:, None], lower=True, unit_diagonal=True
+    )[:, 0]
+    return mu_ord[_positions(order)]
+
+
+def interventional_cov_impl(adjacency, order, do_mask, noise_var):
+    """(d, d) post-intervention covariance ``A' D' A'^T`` (intervened
+    variables are pinned: zero variance rows/columns)."""
+    from .effects import total_effects_impl
+
+    b = mutilate(adjacency.astype(jnp.float32), do_mask)
+    a = total_effects_impl(b, order)
+    var = jnp.where(do_mask, 0.0, noise_var.astype(jnp.float32))
+    return (a * var[None, :]) @ a.T
+
+
+@jax.jit
+def _interventional_jit(adjacency, order, do_mask, do_values,
+                        noise_mean, noise_var):
+    return (
+        interventional_mean_impl(adjacency, order, do_mask, do_values,
+                                 noise_mean),
+        interventional_cov_impl(adjacency, order, do_mask, noise_var),
+    )
+
+
+def interventional_moments(
+    result: api.FitResult,
+    do: Mapping[int, float],
+    *,
+    mean=None,
+    cov=None,
+):
+    """Post-intervention (mean, covariance) of a fitted graph.
+
+    ``mean``/``cov`` are the *observational* moments of the data the
+    graph was fitted on (a sample mean/covariance, or a streaming
+    moment store's — see :func:`interventional_from_state`). With
+    ``mean=None`` the data is taken as centered; with ``cov=None`` the
+    noise variances fall back to the fit's ``resid_var`` diagnostics
+    (exact for the OLS pruner, which makes residuals empirically
+    uncorrelated with predecessors).
+    """
+    d = int(result.order.shape[0])
+    do_mask, do_values = do_arrays(d, do)
+    mean = (
+        jnp.zeros((d,), jnp.float32) if mean is None
+        else jnp.asarray(mean, jnp.float32)
+    )
+    if cov is None:
+        r = jnp.eye(d, dtype=jnp.float32) - result.adjacency
+        noise_mean = r @ mean
+        noise_var = jnp.asarray(result.resid_var, jnp.float32)
+    else:
+        noise_mean, noise_var = noise_stats(
+            result.adjacency, mean, jnp.asarray(cov)
+        )
+    mu, sigma = _interventional_jit(
+        result.adjacency,
+        result.order,
+        jnp.asarray(do_mask),
+        jnp.asarray(do_values),
+        noise_mean,
+        noise_var,
+    )
+    return np.asarray(mu), np.asarray(sigma)
+
+
+def interventional_from_state(
+    result: api.FitResult,
+    state,
+    do: Mapping[int, float],
+):
+    """Interventional moments straight from a streaming moment store.
+
+    ``state`` is a :class:`repro.stream.stats.MomentState` over the
+    fitted variables — or a *lag-augmented* one (a rolling VarLiNGAM
+    session's ``aug_state``), whose leading (d, d) block holds the
+    instantaneous moments; the block is sliced out here. No rows are
+    re-read: the mean/covariance the do-calculus needs are exactly the
+    sufficient statistics the stream already maintains.
+    """
+    d = int(result.order.shape[0])
+    mean = jnp.asarray(state.mean)[:d]
+    cov = jnp.asarray(state.covariance)[:d, :d]
+    return interventional_moments(result, do, mean=mean, cov=cov)

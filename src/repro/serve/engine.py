@@ -18,6 +18,12 @@ sessions are bucketed by (residual shape, fit config) and executed
 through ``batched.fit_many_from_stats`` — a burst of due windows costs
 one device-parallel program, and each client gets back a
 :class:`~repro.stream.session.GraphDelta` rather than the full matrix.
+
+Fitted (or streaming) graphs are *queryable*: ``query`` admits a mixed
+micro-batch of effect / intervention / root-cause requests
+(:mod:`repro.infer.query`) and executes each (kind, shape) bucket as
+one compiled device-parallel program; stream-session ids resolve to
+the session's live estimate with moments from its incremental store.
 """
 
 from __future__ import annotations
@@ -32,6 +38,7 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.core import api as lingam_api
 from repro.core import batched as lingam_batched
+from repro.infer import query as query_lib
 from repro.models import model as model_lib
 from repro.stream import session as stream_session
 from repro.stream import window as stream_window
@@ -156,6 +163,11 @@ class CausalDiscoveryEngine:
         self.batch_size = batch_size
         self._streams: Dict[str, stream_session.StreamSession] = {}
         self._next_sid = 0
+        self.queries = query_lib.QueryEngine(
+            batch_size=batch_size,
+            backend=self.config.backend,
+            tune=self.config.tune,
+        )
         if warmup_shapes:
             self.warmup(warmup_shapes)
 
@@ -196,10 +208,7 @@ class CausalDiscoveryEngine:
         return plans
 
     def _bucket(self, n: int) -> int:
-        b = 1
-        while b < n:
-            b *= 2
-        return min(b, self.batch_size)
+        return lingam_batched.pow2_bucket(n, self.batch_size)
 
     def _run_mesh(self, group: List[FitRequest]) -> None:
         """Mesh plan: one sharded full-fit program per dataset; the
@@ -323,6 +332,40 @@ class CausalDiscoveryEngine:
                     )
                     out.append((sid, s.apply_fit(fit)))
         return out
+
+    # ------------------------------------------------------------------
+    # Causal queries (effects / interventions / RCA)
+    # ------------------------------------------------------------------
+
+    def query(self, queries: List[object]) -> List[object]:
+        """Answer a micro-batch of causal queries against fitted graphs.
+
+        Accepts a mixed list of :class:`repro.infer.query.EffectQuery` /
+        ``InterventionQuery`` / ``RCAQuery``. Each request's ``graph``
+        may be a :class:`~repro.infer.query.FittedGraph`, a bare
+        :class:`~repro.core.api.FitResult` (wrapped with centered-data
+        defaults), or a *stream session id* — resolved here to the
+        session's current estimate with observational moments pulled
+        from its incremental store (no rows re-read). Execution is
+        delegated to the :class:`~repro.infer.query.QueryEngine`:
+        bucketed by (kind, shape), padded to the power-of-two
+        micro-batch, one compiled device-parallel program per bucket.
+
+        Session-backed graphs are re-snapshotted from the *live*
+        session on every call (the resolved ``FittedGraph`` remembers
+        its ``sid``), so a client that re-issues the same query object
+        after more posts sees the current estimate, never a stale one.
+        """
+        for q in queries:
+            sid = (
+                q.graph if isinstance(q.graph, str)
+                else getattr(q.graph, "sid", None)
+            )
+            if sid is not None:
+                q.graph = query_lib.FittedGraph.from_session(
+                    self._streams[sid]
+                )
+        return self.queries.run(queries)
 
     def stream_session(self, sid: str) -> stream_session.StreamSession:
         """The live session object (last_fit / last_delta / state)."""
