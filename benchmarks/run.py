@@ -88,10 +88,16 @@ def main() -> None:
             return float(o)
         raise TypeError(type(o))
 
+    from repro import obs  # noqa: E402,PLC0415
+
+    prov = obs.provenance(repo_root=_REPO_ROOT)
+
     def write_artifact(stem: str, payload: dict) -> None:
         """Mirror one benchmark's results to BENCH_<stem>.json at the
         repo root — the machine-readable perf-trajectory artifacts CI
-        and future sessions diff."""
+        and future sessions diff. Each artifact is stamped with run
+        provenance (device kind, jax version, git sha, timestamp) so a
+        regression report can say *what* produced the numbers."""
         out = os.path.join(_REPO_ROOT, f"BENCH_{stem}.json")
         with open(out, "w") as f:
             json.dump(
@@ -99,6 +105,7 @@ def main() -> None:
                     "bench": stem,
                     "quick": not args.full,
                     "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+                    "provenance": prov,
                     **payload,
                 },
                 f, indent=1, default=default,

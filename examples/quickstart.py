@@ -1,13 +1,22 @@
 """Quickstart: causal discovery with AcceleratedLiNGAM on TPU/CPU.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--telemetry]
 
 Simulates data from a known layered DAG (paper §3.1 protocol), runs the
 parallel DirectLiNGAM, verifies it against the sequential reference,
 prints the recovered adjacency — then *uses* the graph: total-effect
 queries, a do-intervention, and root-cause attribution of an anomalous
 sample (the full discovery -> query path).
+
+With ``--telemetry`` the run also drives the serving engine (a fit
+micro-batch, a streaming session through refit flushes, and a causal
+query) with the observability layer on (:mod:`repro.obs`), then prints
+the span tree, the metrics snapshot, and the compile-event log —
+covering kernel dispatch -> ordering -> pruning -> serve flush ->
+query.
 """
+
+import argparse
 
 import numpy as np
 
@@ -98,5 +107,55 @@ def main():
           f"ranking {report.ranking(top_k=3)}")
 
 
+def telemetry_demo():
+    """Drive dispatch -> ordering -> pruning -> serve flush -> query
+    with telemetry on; print the span tree + metrics + compile log."""
+    import json
+
+    from repro import obs
+    from repro.infer import query as query_lib
+    from repro.serve.engine import CausalDiscoveryEngine, FitRequest
+    from repro.stream.session import StreamConfig
+
+    obs.enable()
+    obs.reset_all()
+    rng = np.random.default_rng(0)
+
+    print("\n=== Telemetry: serving engine under observation ===")
+    eng = CausalDiscoveryEngine(batch_size=4)
+    eng.run([
+        FitRequest(data=rng.normal(size=(256, 8)).astype(np.float32))
+        for _ in range(3)
+    ])
+    sid = eng.open_stream(
+        StreamConfig(d=6, chunk=32, window_chunks=4, refit_every=1)
+    )
+    for _ in range(7):
+        eng.post_chunk(sid, rng.normal(size=(32, 6)).astype(np.float32))
+    eng.flush_streams()
+    answered = eng.query([
+        query_lib.EffectQuery(graph=sid),
+        query_lib.InterventionQuery(graph=sid, do={0: 1.5}),
+    ])
+    print(f"stream {sid}: {eng.stream_session(sid).n_refits} refits, "
+          f"{len(answered)} queries answered, "
+          f"{len(eng.last_flush_errors)} flush errors")
+
+    print("\n--- span tree (spans tagged [trace] ran at trace time) ---")
+    print(obs.format_tree())
+    print("--- metrics snapshot ---")
+    print(json.dumps(obs.metrics.snapshot(), indent=1, sort_keys=True))
+    print("--- compile events (op -> compiles) ---")
+    for op, n in sorted(obs.compile_log.by_op().items()):
+        print(f"  {op}: {n}")
+
+
 if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--telemetry", action="store_true",
+                    help="run the serving/streaming demo with repro.obs "
+                         "enabled and print span tree + metrics")
+    args = ap.parse_args()
     main()
+    if args.telemetry:
+        telemetry_demo()

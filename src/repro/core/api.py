@@ -49,6 +49,9 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import obs
+from repro.obs import compile_log
+
 from . import ordering, pruning
 
 
@@ -250,10 +253,20 @@ def finish_fit(x, order, config: FitConfig) -> FitResult:
 
 def fit_impl(x, config: FitConfig) -> FitResult:
     """Unjitted trace body of the local plan (for callers composing
-    larger programs — ``vmap`` in the batched engine, ...)."""
+    larger programs — ``vmap`` in the batched engine, ...).
+
+    The stage spans here execute at *trace time* only (once per
+    compile; tagged ``[trace]`` in the span tree) — they account for
+    where trace construction goes, add nothing to the compiled
+    program, and never run in steady state.
+    """
+    compile_log.record("core.fit", shape=x.shape, config=config)
     x = x.astype(jnp.float32)
-    order = _order_for_config(x, config)
-    return finish_fit(x, order, config)
+    with obs.span("fit.ordering", d=x.shape[-1],
+                  compaction=config.compaction):
+        order = _order_for_config(x, config)
+    with obs.span("fit.pruning", method=config.prune_method):
+        return finish_fit(x, order, config)
 
 
 @functools.partial(jax.jit, static_argnames=("config",))
@@ -275,8 +288,10 @@ def fit_fn(x, config: FitConfig = FitConfig()) -> FitResult:
     if config.partition is not None:
         from . import sharded
 
-        return sharded.fit_sharded(x, config)
-    return _fit_local(x, config)
+        with obs.span("fit.mesh", m=x.shape[0], d=x.shape[1]):
+            return sharded.fit_sharded(x, config)
+    with obs.span("fit.local", m=x.shape[0], d=x.shape[1]):
+        return _fit_local(x, config)
 
 
 _STATS_EPS = 1e-12
@@ -285,6 +300,7 @@ _STATS_EPS = 1e-12
 def fit_impl_from_stats(x, mean, cov, config: FitConfig) -> FitResult:
     """Unjitted trace body of the from-stats fit (vmapped by
     ``batched.fit_many_from_stats``)."""
+    compile_log.record("core.fit_from_stats", shape=x.shape, config=config)
     x = x.astype(jnp.float32)
     mean = mean.astype(jnp.float32)
     cov = cov.astype(jnp.float32)

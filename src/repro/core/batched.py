@@ -35,6 +35,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.obs import compile_log
+
 from .api import FitConfig, FitResult, fit_impl, fit_impl_from_stats
 
 
@@ -66,6 +68,7 @@ def fit_many(xs, config: FitConfig = FitConfig()) -> FitResult:
     """Fit every dataset in ``xs`` (b, m, d); returns a batched FitResult
     (order: (b, d), adjacency: (b, d, d), resid_var: (b, d))."""
     _require_local_plan(config, "fit_many")
+    compile_log.record("batched.fit_many", shape=xs.shape, config=config)
     return jax.vmap(lambda x: fit_impl(x, config))(xs)
 
 
@@ -79,6 +82,9 @@ def fit_many_from_stats(
     due stream-session refits here so a burst of rolling windows costs
     one device-parallel dispatch instead of b sequential fits."""
     _require_local_plan(config, "fit_many_from_stats")
+    compile_log.record(
+        "batched.fit_many_from_stats", shape=xs.shape, config=config
+    )
     return jax.vmap(
         lambda x, mu, cv: fit_impl_from_stats(x, mu, cv, config)
     )(xs, means, covs)
@@ -118,6 +124,9 @@ def bootstrap_fits(x, indices, config: FitConfig = FitConfig()) -> FitResult:
       sweeps reuse the compile cache.
     """
     _require_local_plan(config, "bootstrap_fits")
+    compile_log.record(
+        "batched.bootstrap_fits", shape=indices.shape, config=config
+    )
     xs = jnp.take(x.astype(jnp.float32), indices, axis=0)  # (b, m, d)
     return jax.vmap(lambda xb: fit_impl(xb, config))(xs)
 

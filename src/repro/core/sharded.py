@@ -57,6 +57,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.kernels import ops
 from repro.kernels.ops import _round_up
+from repro.obs import compile_log
 from . import measures, ordering, pruning
 from .api import FitConfig, FitResult
 
@@ -312,6 +313,10 @@ def _build_sharded_fit(m: int, d: int, config: FitConfig):
     m_local = m_pad // n_sample_shards
 
     def full_fit(x_local):
+        compile_log.record(
+            "sharded.fit", shape=(m, d), config=config,
+            mesh="x".join(str(s) for _, s in part.mesh),
+        )
         reducer = MeshReducer(
             m=m, m_local=m_local, axis_sizes=axis_sizes,
             sample_axes=part.sample_axes, pair_axis=part.pair_axis,

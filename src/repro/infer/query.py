@@ -15,9 +15,13 @@ module gives serving traffic that object:
     them by (query kind, graph shape), pads each bucket to the
     power-of-two micro-batch, and executes it as **one** compiled
     device-parallel program (``jit(vmap(...))`` over the bucket).
-    Compilation happens once per (kind, shape) signature — pinned by
-    ``tests/test_infer.py`` via :func:`trace_counts` — so steady-state
-    traffic never traces.
+    Compilation happens once per (kind, shape) signature — recorded in
+    the public compile log (``repro.obs.compile_log``, ops
+    ``query.effects`` / ``query.intervention`` / ``query.rca``) and
+    pinned by ``tests/test_infer.py`` — so steady-state traffic never
+    traces. Per-(kind, shape) bucket latencies land in
+    ``repro.obs.metrics`` (series ``query.bucket_s``) when telemetry
+    is enabled.
 
 Interventions use dense (d,) do-masks (:func:`repro.infer.intervene.
 do_arrays`), so requests targeting *different* variables still share a
@@ -28,41 +32,38 @@ stream-session ids to :class:`FittedGraph`\\ s and delegates here.
 
 from __future__ import annotations
 
-import collections
 import dataclasses
+import time
 from typing import Dict, List, Mapping, Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import api, batched
+from repro.obs import compile_log
+from repro.obs import metrics as obs_metrics
 
 from . import effects as effects_lib
 from . import intervene as intervene_lib
 from . import rca as rca_lib
 
-#: Trace-time counters per query kind: incremented inside the jitted
-#: batch kernels' trace bodies, so each (kind, shape-bucket) signature
-#: bumps its kind exactly once per compile — the single-compile
-#: contract the tests pin.
-_TRACE_COUNTS: collections.Counter = collections.Counter()
-
-
-def trace_counts() -> Dict[str, int]:
-    """Snapshot of compiles per query kind (testing/observability)."""
-    return dict(_TRACE_COUNTS)
+# Each batch kernel records its trace body in the public compile log
+# (one event per (kind, shape-bucket) signature, never in steady state)
+# — the single-compile contract tests/test_infer.py pins through
+# repro.obs.compile_log.
 
 
 @jax.jit
 def _effects_batch(adj, order):
-    _TRACE_COUNTS["effects"] += 1  # trace-time side effect
+    compile_log.record("query.effects", shape=adj.shape)
     return jax.vmap(effects_lib.total_effects_impl)(adj, order)
 
 
 @jax.jit
 def _intervene_batch(adj, order, mask, values, noise_mean, noise_var):
-    _TRACE_COUNTS["intervention"] += 1
+    compile_log.record("query.intervention", shape=adj.shape)
     mu = jax.vmap(intervene_lib.interventional_mean_impl)(
         adj, order, mask, values, noise_mean
     )
@@ -74,7 +75,7 @@ def _intervene_batch(adj, order, mask, values, noise_mean, noise_var):
 
 @jax.jit
 def _rca_batch(adj, order, rows, mean, resid_var, target):
-    _TRACE_COUNTS["rca"] += 1
+    compile_log.record("query.rca", shape=rows.shape)
     scores = jax.vmap(rca_lib.noise_scores_impl)(adj, rows, mean, resid_var)
     contrib = jax.vmap(rca_lib.contributions_impl)(
         adj, order, rows, mean, target
@@ -236,9 +237,21 @@ class QueryEngine:
             buckets.setdefault(key, []).append(q)
         for key, group in buckets.items():
             runner = getattr(self, f"_run_{key[0]}")
-            for start in range(0, len(group), self.batch_size):
-                part = group[start:start + self.batch_size]
-                runner(part + [part[0]] * (self._bucket(len(part)) - len(part)))
+            with obs.span(
+                "query.bucket", kind=key[0], d=key[1], n=len(group)
+            ):
+                t0 = time.perf_counter()
+                for start in range(0, len(group), self.batch_size):
+                    part = group[start:start + self.batch_size]
+                    runner(
+                        part
+                        + [part[0]] * (self._bucket(len(part)) - len(part))
+                    )
+                obs_metrics.observe(
+                    "query.bucket_s", time.perf_counter() - t0,
+                    kind=key[0], d=key[1],
+                )
+                obs_metrics.inc("query.requests", len(group), kind=key[0])
         return queries
 
     @staticmethod

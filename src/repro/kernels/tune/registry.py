@@ -40,6 +40,9 @@ import dataclasses
 import functools
 from typing import Callable, Dict, Optional, Tuple
 
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+
 from . import cache as tune_cache
 
 #: Sample-axis accumulation granularity shared with the Pallas kernels
@@ -416,6 +419,36 @@ def dispatch(
       table:  explicit :class:`TuneTable` (tests/benchmarks); defaults
               to the process singleton.
     """
+    with obs_trace.span(
+        "kernels.dispatch", op=op, shape=tuple(shape), mode=mode
+    ) as sp:
+        plan = _dispatch_resolve(
+            op, shape, dtype, backend,
+            mode=mode, chunk=chunk, mesh=mesh, table=table,
+        )
+        sp.set(variant=plan.variant, source=plan.source)
+    # Per-variant dispatch counts + tuned-vs-heuristic plan provenance
+    # (off unless telemetry is enabled; dispatch runs at trace time, so
+    # steady-state traffic never reaches this).
+    obs_metrics.inc(
+        "kernels.dispatch",
+        op=op, backend=plan.backend, variant=plan.variant,
+        source=plan.source,
+    )
+    return plan
+
+
+def _dispatch_resolve(
+    op: str,
+    shape,
+    dtype: str = "float32",
+    backend: Optional[str] = None,
+    *,
+    mode: str = "cache",
+    chunk: Optional[int] = None,
+    mesh: bool = False,
+    table: Optional[tune_cache.TuneTable] = None,
+) -> Plan:
     if mode not in _MODES:
         raise ValueError(f"unknown tune mode {mode!r}; expected {_MODES}")
     backend = backend or default_backend()

@@ -1,0 +1,118 @@
+"""Compile-event accounting: which programs traced, how often, and why.
+
+Every jit entry point in the library calls :func:`record` from inside
+its trace body. Tracing runs the body as plain Python exactly once per
+compile, so the call fires once per (shape, config) signature and never
+again in steady state — the compile-count invariant the tests used to
+pin with private per-module trace counters now lives behind one public
+API, and a cache-miss storm (an engine recompiling per request) becomes
+*queryable*::
+
+    from repro.obs import compile_log
+
+    before = compile_log.total("batched.fit_many")
+    engine.run(requests)
+    assert compile_log.total("batched.fit_many") == before  # warm cache
+
+Events are keyed by ``(op, bucket_shape, config_hash)``; the recorder is
+**always on** (unlike spans/metrics) because its only cost is a counter
+update at trace time — steady-state execution never reaches it. Calling
+it inside a trace body adds no operations to the traced program, so
+results are bit-identical with or without telemetry.
+"""
+
+from __future__ import annotations
+
+import collections
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+_MAX_EVENTS = 4096
+
+_lock = threading.Lock()
+_counts: collections.Counter = collections.Counter()
+_events: "collections.deque" = collections.deque(maxlen=_MAX_EVENTS)
+
+
+def _shape_key(shape) -> Tuple[int, ...]:
+    if shape is None:
+        return ()
+    try:
+        return tuple(int(s) for s in shape)
+    except TypeError:
+        return (int(shape),)
+
+
+def config_hash(config) -> str:
+    """Short stable token for a (hashable) config object."""
+    if config is None:
+        return "-"
+    try:
+        h = hash(config)
+    except TypeError:
+        h = hash(repr(config))
+    return f"{h & 0xFFFFFFFF:08x}"
+
+
+def record(op: str, shape=None, config=None, **attrs) -> None:
+    """Log one compile event for ``op`` (call from inside a trace body)."""
+    key = (op, _shape_key(shape), config_hash(config))
+    with _lock:
+        _counts[key] += 1
+        _events.append({
+            "op": op,
+            "shape": key[1],
+            "config": key[2],
+            "time": time.time(),
+            **attrs,
+        })
+    from . import metrics
+
+    metrics.inc("compiles", op=op)
+
+
+def counts(op: Optional[str] = None) -> Dict[Tuple, int]:
+    """Compile counts keyed by (op, shape, config_hash)."""
+    with _lock:
+        items = dict(_counts)
+    if op is None:
+        return items
+    return {k: v for k, v in items.items() if k[0] == op}
+
+
+def total(op: Optional[str] = None) -> int:
+    """Total compiles, optionally restricted to one op."""
+    return sum(counts(op).values())
+
+
+def by_op() -> Dict[str, int]:
+    """Compile counts aggregated per op name."""
+    out: Dict[str, int] = {}
+    for (op, _, _), n in counts().items():
+        out[op] = out.get(op, 0) + n
+    return out
+
+
+def events(op: Optional[str] = None) -> List[dict]:
+    """The recent compile events, oldest first (bounded ring)."""
+    with _lock:
+        evs = list(_events)
+    return evs if op is None else [e for e in evs if e["op"] == op]
+
+
+def snapshot() -> Dict[str, Any]:
+    """JSON-safe summary: per-op totals + per-signature counts."""
+    return {
+        "by_op": by_op(),
+        "by_signature": {
+            f"{op}:{list(shape)}:{cfg}": n
+            for (op, shape, cfg), n in sorted(counts().items())
+        },
+    }
+
+
+def reset() -> None:
+    with _lock:
+        _counts.clear()
+        _events.clear()

@@ -1,0 +1,162 @@
+"""Process-local counters, gauges, and latency histograms.
+
+The metric surface the serving/stream/kernel layers record into::
+
+    from repro.obs import metrics
+
+    metrics.inc("serve.requests", 3)
+    metrics.observe("serve.flush_s", 0.012, shape="(256,64)")
+    metrics.gauge("stream.staleness_chunks", 4, sid="stream-0")
+
+Series are keyed by (name, sorted labels). Histograms keep running
+count/sum plus a bounded reservoir of recent values, from which
+:func:`snapshot` derives p50/p95/p99 summaries. Exports:
+
+  * :func:`snapshot` — a plain dict (JSON-safe) of every series.
+  * :func:`to_prometheus_text` — the Prometheus text exposition format.
+
+Recording is gated on :func:`repro.obs.trace.enabled` — one flag test
+when telemetry is off — and guarded by a process lock when on, so
+snapshots are stable under concurrent serving sessions. Spans feed the
+same histograms (``span.<name>_s``) on exit.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+from . import trace
+
+_RESERVOIR = 2048
+
+_lock = threading.Lock()
+_counters: Dict[Tuple, float] = {}
+_gauges: Dict[Tuple, float] = {}
+_hists: Dict[Tuple, "_Hist"] = {}
+
+
+class _Hist:
+    __slots__ = ("count", "total", "values", "_i")
+
+    def __init__(self):
+        self.count = 0
+        self.total = 0.0
+        self.values: list = []
+        self._i = 0
+
+    def add(self, v: float) -> None:
+        self.count += 1
+        self.total += v
+        if len(self.values) < _RESERVOIR:
+            self.values.append(v)
+        else:  # overwrite oldest (ring)
+            self.values[self._i] = v
+            self._i = (self._i + 1) % _RESERVOIR
+
+
+def _key(name: str, labels: Dict[str, Any]) -> Tuple:
+    return (name,) + tuple(sorted((k, str(v)) for k, v in labels.items()))
+
+
+def inc(name: str, value: float = 1.0, **labels) -> None:
+    """Add ``value`` to a monotonically increasing counter."""
+    if not trace.enabled():
+        return
+    k = _key(name, labels)
+    with _lock:
+        _counters[k] = _counters.get(k, 0.0) + value
+
+
+def gauge(name: str, value: float, **labels) -> None:
+    """Set a last-value-wins gauge."""
+    if not trace.enabled():
+        return
+    k = _key(name, labels)
+    with _lock:
+        _gauges[k] = float(value)
+
+
+def observe(name: str, value: float, **labels) -> None:
+    """Record one observation into a histogram series."""
+    if not trace.enabled():
+        return
+    k = _key(name, labels)
+    with _lock:
+        h = _hists.get(k)
+        if h is None:
+            h = _hists[k] = _Hist()
+        h.add(float(value))
+
+
+def _percentile(sorted_vals, q: float) -> float:
+    if not sorted_vals:
+        return 0.0
+    idx = min(len(sorted_vals) - 1, int(round(q * (len(sorted_vals) - 1))))
+    return sorted_vals[idx]
+
+
+def _series_name(key: Tuple) -> str:
+    name, labels = key[0], key[1:]
+    if not labels:
+        return name
+    body = ",".join(f'{k}="{v}"' for k, v in labels)
+    return f"{name}{{{body}}}"
+
+
+def snapshot() -> Dict[str, Dict[str, Any]]:
+    """Every series as a JSON-safe dict (histograms summarized)."""
+    with _lock:
+        counters = {_series_name(k): v for k, v in _counters.items()}
+        gauges = {_series_name(k): v for k, v in _gauges.items()}
+        hists = {}
+        for k, h in _hists.items():
+            vals = sorted(h.values)
+            hists[_series_name(k)] = {
+                "count": h.count,
+                "sum": h.total,
+                "p50": _percentile(vals, 0.50),
+                "p95": _percentile(vals, 0.95),
+                "p99": _percentile(vals, 0.99),
+                "max": vals[-1] if vals else 0.0,
+            }
+    return {"counters": counters, "gauges": gauges, "histograms": hists}
+
+
+def to_prometheus_text() -> str:
+    """Prometheus text exposition of the current snapshot."""
+    snap = snapshot()
+    lines = []
+
+    def emit(series: str, value) -> None:
+        name = series.split("{", 1)[0]
+        labels = series[len(name):]
+        lines.append(f"{_sanitize(name)}{labels} {value}")
+
+    for s, v in sorted(snap["counters"].items()):
+        emit(s + "_total" if "{" not in s else _with_suffix(s, "_total"), v)
+    for s, v in sorted(snap["gauges"].items()):
+        emit(s, v)
+    for s, h in sorted(snap["histograms"].items()):
+        for stat in ("count", "sum", "p50", "p95", "p99", "max"):
+            emit(_with_suffix(s, f"_{stat}"), h[stat])
+    return "\n".join(lines) + ("\n" if lines else "")
+
+
+def _sanitize(name: str) -> str:
+    return name.replace(".", "_").replace("-", "_")
+
+
+def _with_suffix(series: str, suffix: str) -> str:
+    if "{" in series:
+        name, rest = series.split("{", 1)
+        return f"{name}{suffix}{{{rest}"
+    return series + suffix
+
+
+def reset() -> None:
+    """Drop every recorded series (tests / fresh snapshots)."""
+    with _lock:
+        _counters.clear()
+        _gauges.clear()
+        _hists.clear()

@@ -24,22 +24,33 @@ micro-batch of effect / intervention / root-cause requests
 (:mod:`repro.infer.query`) and executes each (kind, shape) bucket as
 one compiled device-parallel program; stream-session ids resolve to
 the session's live estimate with moments from its incremental store.
+
+The engine is instrumented with :mod:`repro.obs` (off by default):
+spans around run/flush/query, histograms for queue wait, bucket fill,
+and flush latency, and a deferral counter for the bounded-deferral
+auto-flush rule. Per-session refit failures during a flush never abort
+the batch — they surface as :class:`FlushError` records in
+``last_flush_errors`` (telemetry on or off) and the failed sessions
+stay due for retry.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.base import ArchConfig
 from repro.core import api as lingam_api
 from repro.core import batched as lingam_batched
 from repro.infer import query as query_lib
 from repro.models import model as model_lib
+from repro.obs import metrics as obs_metrics
 from repro.stream import session as stream_session
 from repro.stream import window as stream_window
 
@@ -125,6 +136,31 @@ class FitRequest:
     result: Optional[lingam_api.FitResult] = None  # numpy-leaved on return
 
 
+@dataclasses.dataclass
+class FlushError:
+    """One session's failed refit during :meth:`CausalDiscoveryEngine.
+    flush_streams`, surfaced as data instead of aborting the flush.
+
+    ``stage`` names where the failure happened: ``"prepare"`` (the
+    session's refit plan could not be built), ``"fit"`` (the batched —
+    or fallback per-session — fit program raised), or ``"finish"``
+    (residual-variance finish / delta application). A failed session
+    keeps its due state, so the next post or explicit flush retries it.
+    """
+
+    sid: str            # "*" for a whole-bucket program failure
+    stage: str          # "prepare" | "fit" | "finish"
+    bucket: Optional[Tuple[Tuple[int, ...], lingam_api.FitConfig]]
+    error: Exception
+
+    def summary(self) -> str:
+        shape = None if self.bucket is None else self.bucket[0]
+        return (
+            f"flush error [{self.stage}] session={self.sid} "
+            f"bucket={shape}: {type(self.error).__name__}: {self.error}"
+        )
+
+
 class CausalDiscoveryEngine:
     """Micro-batched DirectLiNGAM serving over the functional core.
 
@@ -163,6 +199,9 @@ class CausalDiscoveryEngine:
         self.batch_size = batch_size
         self._streams: Dict[str, stream_session.StreamSession] = {}
         self._next_sid = 0
+        # Errors from the most recent flush_streams call (always kept,
+        # telemetry on or off) — empty means every due refit landed.
+        self.last_flush_errors: List[FlushError] = []
         self.queries = query_lib.QueryEngine(
             batch_size=batch_size,
             backend=self.config.backend,
@@ -224,32 +263,48 @@ class CausalDiscoveryEngine:
             )
 
     def run(self, requests: List[FitRequest]) -> List[FitRequest]:
-        by_shape = {}
-        for r in requests:
-            by_shape.setdefault(np.asarray(r.data).shape, []).append(r)
-        for shape, group in by_shape.items():
-            if self.config.partition is not None:
-                self._run_mesh(group)
-                continue
-            for start in range(0, len(group), self.batch_size):
-                chunk = group[start:start + self.batch_size]
-                bucket = self._bucket(len(chunk))
-                xs = np.stack(
-                    [np.asarray(r.data, np.float32) for r in chunk]
-                    + [np.asarray(chunk[0].data, np.float32)]
-                    * (bucket - len(chunk))
-                )
-                results = lingam_batched.fit_many(
-                    jnp.asarray(xs), self.config
-                )
-                order = np.asarray(results.order)
-                adj = np.asarray(results.adjacency)
-                rv = np.asarray(results.resid_var)
-                for i, r in enumerate(chunk):
-                    r.result = lingam_api.FitResult(
-                        order=order[i], adjacency=adj[i], resid_var=rv[i]
-                    )
+        with obs.span("serve.run", n=len(requests)):
+            by_shape = {}
+            for r in requests:
+                by_shape.setdefault(np.asarray(r.data).shape, []).append(r)
+            for shape, group in by_shape.items():
+                if self.config.partition is not None:
+                    self._run_mesh(group)
+                    continue
+                for start in range(0, len(group), self.batch_size):
+                    chunk = group[start:start + self.batch_size]
+                    self._run_fit_bucket(shape, chunk)
+            obs_metrics.inc("serve.fit_requests", len(requests))
         return requests
+
+    def _run_fit_bucket(self, shape, chunk: List[FitRequest]) -> None:
+        bucket = self._bucket(len(chunk))
+        with obs.span(
+            "serve.fit_bucket", shape=shape, n=len(chunk), bucket=bucket
+        ):
+            t0 = time.perf_counter()
+            xs = np.stack(
+                [np.asarray(r.data, np.float32) for r in chunk]
+                + [np.asarray(chunk[0].data, np.float32)]
+                * (bucket - len(chunk))
+            )
+            results = lingam_batched.fit_many(
+                jnp.asarray(xs), self.config
+            )
+            order = np.asarray(results.order)
+            adj = np.asarray(results.adjacency)
+            rv = np.asarray(results.resid_var)
+            for i, r in enumerate(chunk):
+                r.result = lingam_api.FitResult(
+                    order=order[i], adjacency=adj[i], resid_var=rv[i]
+                )
+            obs_metrics.observe(
+                "serve.bucket_fill", len(chunk) / bucket, kind="fit"
+            )
+            obs_metrics.observe(
+                "serve.fit_bucket_s", time.perf_counter() - t0,
+                m=shape[0], d=shape[1],
+            )
 
     # ------------------------------------------------------------------
     # Streaming sessions
@@ -287,6 +342,10 @@ class CausalDiscoveryEngine:
         )
         if n_due and (was_due or n_due >= min(self.batch_size, n_ready)):
             return self.flush_streams()
+        if session.due:
+            # This post left its session due but waiting for bucket
+            # peers — the one-chunk deferral the auto-flush rule allows.
+            obs_metrics.inc("serve.flush_deferrals", sid=sid)
         return []
 
     def flush_streams(self) -> List[Tuple[str, stream_session.GraphDelta]]:
@@ -297,22 +356,62 @@ class CausalDiscoveryEngine:
         to the power-of-two micro-batch and run as one
         ``fit_many_from_stats`` program — the streaming analogue of
         :meth:`run`'s shape bucketing.
+
+        A failing session does **not** abort the flush: its error is
+        recorded as a :class:`FlushError` in ``last_flush_errors`` (and
+        counted in ``serve.flush_errors`` when telemetry is on), the
+        remaining sessions proceed, and the failed session stays due so
+        the next post or flush retries it. A whole-bucket program
+        failure falls back to per-session refits, so one poisoned plan
+        cannot starve its bucket peers.
         """
+        self.last_flush_errors = []
+        t_flush = time.perf_counter()
         due = [
             (sid, s) for sid, s in self._streams.items() if s.due
         ]
         out: List[Tuple[str, stream_session.GraphDelta]] = []
-        buckets: Dict[object, List] = {}
-        for sid, s in due:
-            plan = s.rolling.prepare_refit()
-            key = stream_session.bucket_key(s, plan)
-            buckets.setdefault(key, []).append((sid, s, plan))
-        for (shape, config), group in buckets.items():
-            for start in range(0, len(group), self.batch_size):
-                part = group[start:start + self.batch_size]
-                bucket = self._bucket(len(part))
-                pad = bucket - len(part)
-                plans = [p for _, _, p in part] + [part[0][2]] * pad
+        with obs.span("serve.flush", n_due=len(due)):
+            now = time.monotonic()
+            for sid, s in due:
+                waited = s.due_wait_s(now)
+                if waited is not None:
+                    obs_metrics.observe("serve.queue_wait_s", waited)
+            buckets: Dict[object, List] = {}
+            for sid, s in due:
+                try:
+                    plan = s.rolling.prepare_refit()
+                except Exception as e:  # noqa: BLE001 — surfaced as data
+                    self._flush_error(sid, "prepare", None, e)
+                    continue
+                key = stream_session.bucket_key(s, plan)
+                buckets.setdefault(key, []).append((sid, s, plan))
+            for (shape, config), group in buckets.items():
+                for start in range(0, len(group), self.batch_size):
+                    part = group[start:start + self.batch_size]
+                    out.extend(self._flush_bucket(shape, config, part))
+            obs_metrics.observe(
+                "serve.flush_s", time.perf_counter() - t_flush
+            )
+            obs_metrics.inc("serve.flushes")
+        return out
+
+    def _flush_bucket(
+        self, shape, config, part
+    ) -> List[Tuple[str, stream_session.GraphDelta]]:
+        """One padded ``fit_many_from_stats`` micro-batch of due
+        sessions, with per-session error isolation."""
+        bucket = self._bucket(len(part))
+        pad = bucket - len(part)
+        plans = [p for _, _, p in part] + [part[0][2]] * pad
+        out: List[Tuple[str, stream_session.GraphDelta]] = []
+        with obs.span(
+            "serve.flush_bucket", shape=shape, n=len(part), bucket=bucket
+        ):
+            obs_metrics.observe(
+                "serve.bucket_fill", len(part) / bucket, kind="flush"
+            )
+            try:
                 results = lingam_batched.fit_many_from_stats(
                     jnp.stack([p.resid for p in plans]),
                     jnp.stack([p.resid_mean for p in plans]),
@@ -322,7 +421,16 @@ class CausalDiscoveryEngine:
                 order = np.asarray(results.order)
                 adj = np.asarray(results.adjacency)
                 rv = np.asarray(results.resid_var)
-                for i, (sid, s, plan) in enumerate(part):
+            except Exception as e:  # noqa: BLE001 — surfaced as data
+                self._flush_error("*", "fit", (shape, config), e)
+                for sid, s, _ in part:
+                    try:
+                        out.append((sid, s.refit_now()))
+                    except Exception as e2:  # noqa: BLE001
+                        self._flush_error(sid, "fit", (shape, config), e2)
+                return out
+            for i, (sid, s, plan) in enumerate(part):
+                try:
                     fit = stream_window.finish_refit(
                         plan,
                         lingam_api.FitResult(
@@ -331,7 +439,14 @@ class CausalDiscoveryEngine:
                         ),
                     )
                     out.append((sid, s.apply_fit(fit)))
+                except Exception as e:  # noqa: BLE001
+                    self._flush_error(sid, "finish", (shape, config), e)
         return out
+
+    def _flush_error(self, sid, stage, bucket, error) -> None:
+        err = FlushError(sid=sid, stage=stage, bucket=bucket, error=error)
+        self.last_flush_errors.append(err)
+        obs_metrics.inc("serve.flush_errors", sid=sid, stage=stage)
 
     # ------------------------------------------------------------------
     # Causal queries (effects / interventions / RCA)
@@ -356,16 +471,17 @@ class CausalDiscoveryEngine:
         its ``sid``), so a client that re-issues the same query object
         after more posts sees the current estimate, never a stale one.
         """
-        for q in queries:
-            sid = (
-                q.graph if isinstance(q.graph, str)
-                else getattr(q.graph, "sid", None)
-            )
-            if sid is not None:
-                q.graph = query_lib.FittedGraph.from_session(
-                    self._streams[sid]
+        with obs.span("serve.query", n=len(queries)):
+            for q in queries:
+                sid = (
+                    q.graph if isinstance(q.graph, str)
+                    else getattr(q.graph, "sid", None)
                 )
-        return self.queries.run(queries)
+                if sid is not None:
+                    q.graph = query_lib.FittedGraph.from_session(
+                        self._streams[sid]
+                    )
+            return self.queries.run(queries)
 
     def stream_session(self, sid: str) -> stream_session.StreamSession:
         """The live session object (last_fit / last_delta / state)."""

@@ -20,11 +20,13 @@ path for library use.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import List, Optional, Tuple
 
 import numpy as np
 
 from repro.core import api
+from repro.obs import metrics as obs_metrics
 from . import window as window_lib
 
 
@@ -120,13 +122,32 @@ class StreamSession:
         self.last_fit: Optional[window_lib.RollingFit] = None
         self.last_delta: Optional[GraphDelta] = None
         self._prev_adjacency: Optional[np.ndarray] = None
+        # Monotonic timestamp of the post that made this session due
+        # (None while not due) — the engine reads it at flush time to
+        # report the refit queue wait. Tracked unconditionally: two
+        # attribute writes per transition, no clock reads off-path.
+        self._due_since: Optional[float] = None
 
     def post(self, rows) -> bool:
         """Absorb one chunk; returns True when a refit is now due."""
         self.rolling.push(rows)
         if self.rolling.ready:
             self._chunks_since_refit += 1
+        obs_metrics.inc("stream.chunks", sid=self.sid)
+        obs_metrics.gauge(
+            "stream.staleness_chunks", self._chunks_since_refit,
+            sid=self.sid,
+        )
+        if self.due and self._due_since is None:
+            self._due_since = time.monotonic()
         return self.due
+
+    def due_wait_s(self, now: Optional[float] = None) -> Optional[float]:
+        """Seconds this session has been due without a refit (None when
+        not due). ``now`` lets a flush sample one clock for a batch."""
+        if self._due_since is None:
+            return None
+        return (time.monotonic() if now is None else now) - self._due_since
 
     @property
     def due(self) -> bool:
@@ -148,6 +169,9 @@ class StreamSession:
         self.last_delta = delta
         self.n_refits += 1
         self._chunks_since_refit = 0
+        self._due_since = None
+        obs_metrics.inc("stream.refits", sid=self.sid)
+        obs_metrics.gauge("stream.staleness_chunks", 0, sid=self.sid)
         return delta
 
     def refit_now(self) -> GraphDelta:

@@ -44,6 +44,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import api
+from repro.obs import metrics as obs_metrics
 from . import stats
 
 _RIDGE = 1e-6
@@ -276,6 +277,7 @@ class RollingVarLiNGAM:
                 self.aug_state, lagged_rows(ebuf, self.lags)
             )
             self._lead_tail = evicted[-self.lags:]
+            obs_metrics.inc("stream.retracts")
         self._prev_tail = rows[-self.lags:]
         self.n_pushed += 1
         if (
@@ -299,6 +301,7 @@ class RollingVarLiNGAM:
         for buf in self._window_bufs():
             state = stats.update_chunk(state, lagged_rows(buf, self.lags))
         self.aug_state = state
+        obs_metrics.inc("stream.reanchors")
 
     def prepare_refit(self) -> RefitPlan:
         """Assemble this window's refit inputs (state-derived VAR +

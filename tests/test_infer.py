@@ -17,9 +17,10 @@ Covers the inference PR's contracts:
   * bootstrap effect CIs cover the true effect, with the resample fits
     identical to the plain ``bootstrap_fits`` engine.
   * the query engine answers a mixed-shape micro-batch with one
-    compile per (kind, shape) bucket (trace-counter pin) and results
-    identical to the direct single-query path; stream-session ids
-    resolve through the serving engine.
+    compile per (kind, shape) bucket (pinned through the public
+    ``repro.obs.compile_log``) and results identical to the direct
+    single-query path; stream-session ids resolve through the serving
+    engine.
   * hypothesis property: relabeling variables permutes the effect
     matrix accordingly (effects are invariant to variable order).
 """
@@ -33,6 +34,7 @@ import jax.numpy as jnp
 from repro.core import api, batched
 from repro.data.simulate import simulate_do, simulate_lingam
 from repro.infer import effects, intervene, query, rca
+from repro.obs import compile_log
 from repro.serve.engine import CausalDiscoveryEngine
 from repro.stream import StreamConfig, stats
 
@@ -335,18 +337,20 @@ def test_query_engine_one_compile_per_bucket():
             ),
         ]
 
-    before = query.trace_counts()
+    before = {op: compile_log.total(op) for op in
+              ("query.effects", "query.intervention", "query.rca")}
     qs = engine.run(make_queries())
-    after = query.trace_counts()
     # One compile per (kind, shape) bucket: effects d=9 (pair) and d=13
     # (singleton) are distinct buckets; interventions share one; RCA one.
-    assert after.get("effects", 0) - before.get("effects", 0) == 2
-    assert after.get("intervention", 0) - before.get("intervention", 0) == 1
-    assert after.get("rca", 0) - before.get("rca", 0) == 1
+    assert compile_log.total("query.effects") - before["query.effects"] == 2
+    assert (compile_log.total("query.intervention")
+            - before["query.intervention"]) == 1
+    assert compile_log.total("query.rca") - before["query.rca"] == 1
+    after = compile_log.total()
 
     # Steady state: the identical mix re-executes with zero compiles.
     qs2 = engine.run(make_queries())
-    assert query.trace_counts() == after
+    assert compile_log.total() == after
 
     # Answers match the direct single-query paths.
     for q in (qs[0], qs[1], qs[2]):

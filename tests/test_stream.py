@@ -28,6 +28,8 @@ import pytest
 from repro.core import api, batched
 from repro.data.simulate import simulate_lingam, simulate_var_stocks
 from repro.kernels import ops
+from repro.obs import compile_log
+from repro.serve import engine as serve_engine
 from repro.serve.engine import CausalDiscoveryEngine
 from repro.stream import StreamConfig, session as session_lib, stats, window
 
@@ -469,3 +471,82 @@ def test_engine_refit_every_throttles():
     # Ready after wc pushes; 4 more pushes at refit_every=2 -> 2 refits.
     assert n_deltas == 2
     assert eng.stream_session(sid).n_refits == 2
+
+
+def test_engine_flush_compiles_once_per_shape_bucket():
+    """A steady flush cadence reuses the batched refit program: after
+    the warmup rounds have traced each (bucket, shape) signature —
+    visible in the public ``repro.obs.compile_log`` — further full
+    rounds add zero compile events."""
+    d, chunk, wc = 5, 48, 3  # unique dims so other tests' caches can't mask
+    cfg = _stream_config(d, chunk, wc)
+    eng = CausalDiscoveryEngine(batch_size=4)
+    all_chunks = [_stock_chunks(d, chunk, wc + 6, seed=s) for s in (21, 22)]
+    sids = [eng.open_stream(cfg) for _ in all_chunks]
+    n0 = compile_log.total("batched.fit_many_from_stats")
+    for k in range(wc + 2):
+        for sid, chunks in zip(sids, all_chunks):
+            eng.post_chunk(sid, chunks[k])
+    eng.flush_streams()
+    n_warm = compile_log.total("batched.fit_many_from_stats")
+    assert n_warm > n0  # the fill/steady shape signatures traced once...
+    for k in range(wc + 2, wc + 4):
+        for sid, chunks in zip(sids, all_chunks):
+            eng.post_chunk(sid, chunks[k])
+    eng.flush_streams()
+    # ...and two more full rounds replay them without re-tracing.
+    assert compile_log.total("batched.fit_many_from_stats") == n_warm
+    assert not eng.last_flush_errors
+
+
+def test_engine_flush_isolates_failing_session(monkeypatch):
+    """One session failing to build its refit plan must not abort the
+    flush: peers refit, the failure lands in ``last_flush_errors`` as a
+    structured event, and the broken session stays due (retryable)."""
+    d, chunk, wc = 6, 64, 3
+    cfg = _stream_config(d, chunk, wc)
+    eng = CausalDiscoveryEngine(batch_size=8)
+    good, bad = eng.open_stream(cfg), eng.open_stream(cfg)
+    chunks = _stock_chunks(d, chunk, wc, seed=31)
+    for rows in chunks:  # fill both windows; both become due
+        eng.stream_session(good).post(rows)
+        eng.stream_session(bad).post(rows)
+
+    def boom():
+        raise RuntimeError("poisoned moment state")
+
+    monkeypatch.setattr(
+        eng.stream_session(bad).rolling, "prepare_refit", boom
+    )
+    out = eng.flush_streams()
+    assert [sid for sid, _ in out] == [good]
+    (err,) = eng.last_flush_errors
+    assert (err.sid, err.stage) == (bad, "prepare")
+    assert isinstance(err.error, RuntimeError)
+    assert "poisoned" in err.summary()
+    assert eng.stream_session(bad).due  # still due: next flush retries
+
+
+def test_engine_flush_falls_back_per_session_on_bucket_failure(monkeypatch):
+    """A whole-bucket program failure degrades to per-session refits —
+    every session still gets its delta, and the bucket-level error is
+    recorded with sid='*'."""
+    d, chunk, wc = 6, 64, 3
+    cfg = _stream_config(d, chunk, wc)
+    eng = CausalDiscoveryEngine(batch_size=8)
+    sids = [eng.open_stream(cfg) for _ in range(2)]
+    for k, rows in enumerate(_stock_chunks(d, chunk, wc, seed=33)):
+        for sid in sids:
+            eng.stream_session(sid).post(rows)
+
+    def boom(*a, **kw):
+        raise RuntimeError("bucket program OOM")
+
+    monkeypatch.setattr(
+        serve_engine.lingam_batched, "fit_many_from_stats", boom
+    )
+    out = eng.flush_streams()
+    assert sorted(sid for sid, _ in out) == sorted(sids)
+    (err,) = eng.last_flush_errors
+    assert (err.sid, err.stage) == ("*", "fit")
+    assert all(not eng.stream_session(sid).due for sid in sids)

@@ -12,6 +12,7 @@ import pytest
 
 from repro.kernels import ops
 from repro.kernels.tune import autotune, cache, registry
+from repro.obs import compile_log, metrics as obs_metrics, trace as obs_trace
 
 RNG = np.random.default_rng(7)
 
@@ -383,13 +384,52 @@ def test_engine_warmup_resolves_plans_and_compiles(tmp_path, monkeypatch):
             api.FitConfig(backend="blocked", compaction="staged",
                           min_stage=3, tune="cache")
         )
+        n0 = compile_log.total("batched.fit_many")
         plans = eng.warmup([(64, 5)])
         assert plans and all(
             isinstance(p, registry.Plan) for p in plans.values()
         )
+        # Warmup pre-compiled the vmap fit program (public compile-log
+        # pin: one event per (shape, config) signature).
+        n_warm = compile_log.total("batched.fit_many")
+        assert n_warm == n0 + 1
         x = RNG.laplace(size=(64, 5)).astype(np.float32)
         (req,) = eng.run([FitRequest(data=x)])
         assert sorted(req.result.order.tolist()) == list(range(5))
+        # Steady state: the warmed shape serves with zero new compiles.
+        assert compile_log.total("batched.fit_many") == n_warm
+    finally:
+        cache.reset_table()
+
+
+def test_dispatch_telemetry_counts_variants(tmp_path, monkeypatch):
+    """Enabled telemetry counts each dispatch by (op, variant, source)
+    and never changes the resolved plan."""
+    from repro import obs
+
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(tmp_path / "t.json"))
+    cache.reset_table()
+    try:
+        plain = registry.dispatch(
+            "pairwise_moments", (512, 16), backend="blocked", mode="off"
+        )
+        obs.enable()
+        obs_metrics.reset()
+        try:
+            traced = registry.dispatch(
+                "pairwise_moments", (512, 16), backend="blocked",
+                mode="off",
+            )
+            snap = obs_metrics.snapshot()["counters"]
+        finally:
+            obs.disable()
+            obs_metrics.reset()
+            obs_trace.reset()
+        assert traced == plain
+        (key,) = [k for k in snap if k.startswith("kernels.dispatch")]
+        assert f'variant="{plain.variant}"' in key
+        assert 'source="heuristic"' in key
+        assert snap[key] == 1.0
     finally:
         cache.reset_table()
 
