@@ -21,6 +21,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from benchmarks import (  # noqa: E402
     bench_bootstrap,
+    bench_drift,
     bench_equivalence,
     bench_gene,
     bench_infer,
@@ -45,6 +46,7 @@ BENCHES = {
     "stream": bench_stream.run,            # rolling-window vs from-scratch
     "tune": bench_tune.run,                # heuristic vs tuned kernel plans
     "infer": bench_infer.run,              # batched queries vs per-query loop
+    "drift": bench_drift.run,              # drift detection + refit savings
 }
 
 # Benchmark name -> repo-root artifact stem (BENCH_<stem>.json).

@@ -107,10 +107,17 @@ def main():
           f"ranking {report.ranking(top_k=3)}")
 
 
-def telemetry_demo():
+def telemetry_demo(out_dir=None):
     """Drive dispatch -> ordering -> pruning -> serve flush -> query
-    with telemetry on; print the span tree + metrics + compile log."""
+    with telemetry on; print the span tree + metrics + compile log.
+
+    ``out_dir`` additionally writes the run's artifacts to disk:
+    ``trace_events.json`` (Chrome/Perfetto trace-event format — open in
+    ``chrome://tracing`` or https://ui.perfetto.dev) and
+    ``metrics_snapshot.json``.
+    """
     import json
+    import os
 
     from repro import obs
     from repro.infer import query as query_lib
@@ -149,13 +156,27 @@ def telemetry_demo():
     for op, n in sorted(obs.compile_log.by_op().items()):
         print(f"  {op}: {n}")
 
+    if out_dir is not None:
+        os.makedirs(out_dir, exist_ok=True)
+        trace_path = obs.write_chrome_trace(
+            os.path.join(out_dir, "trace_events.json")
+        )
+        metrics_path = os.path.join(out_dir, "metrics_snapshot.json")
+        with open(metrics_path, "w") as f:
+            json.dump(obs.metrics.snapshot(), f, indent=1, sort_keys=True)
+        print(f"wrote {trace_path} (open in chrome://tracing or "
+              f"ui.perfetto.dev) and {metrics_path}")
+
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--telemetry", action="store_true",
                     help="run the serving/streaming demo with repro.obs "
                          "enabled and print span tree + metrics")
+    ap.add_argument("--telemetry-out", type=str, default="telemetry_out",
+                    help="directory for --telemetry artifacts "
+                         "(chrome trace + metrics snapshot)")
     args = ap.parse_args()
     main()
     if args.telemetry:
-        telemetry_demo()
+        telemetry_demo(out_dir=args.telemetry_out)

@@ -47,6 +47,7 @@ STEM_TO_BENCH = {
     "stream": "stream",
     "kernels": "tune",
     "infer": "infer",
+    "drift": "drift",
 }
 
 # Row fields that identify a row across runs (never treated as metrics).

@@ -176,3 +176,41 @@ def attribute(
         target=target,
         contributions=contributions,
     )
+
+
+def drift_root_candidates(
+    adjacency,
+    order,
+    drift_scores,
+    *,
+    top_k: int = 3,
+):
+    """Rank candidate root variables behind a drift episode.
+
+    ``drift_scores`` are the graph-health monitor's per-variable
+    sequential-test levels (:meth:`GraphHealthMonitor.variable_scores`)
+    — already expressed in the structural-noise frame, i.e. per-noise,
+    with propagation through the served graph deconvolved, exactly like
+    the per-sample z-scores above. But a broken *upstream* mechanism
+    still leaks into descendants' residuals (their regressions were fit
+    to the old mechanism), so ties are broken causally: each variable's
+    own score is discounted by the strongest ancestral score, ancestors
+    judged by the fitted total-effect matrix ``A = (I - B)^{-1}``.
+    A variable drifting alone keeps its full score; one whose drifting
+    ancestor explains it ranks below that ancestor.
+
+    Returns ``[(variable, drift score)]``, strongest candidate first —
+    the same shape as :meth:`RCAResult.ranking`.
+    """
+    from .effects import total_effects_impl
+
+    z = np.abs(np.asarray(drift_scores, np.float32))
+    d = z.shape[0]
+    a = np.asarray(total_effects_impl(
+        jnp.asarray(adjacency), jnp.asarray(order)
+    ))
+    reach = (np.abs(a) > _EPS) & ~np.eye(d, dtype=bool)  # [i, j]: j ancestor of i
+    anc_peak = np.where(reach, z[None, :], 0.0).max(axis=1)
+    adjusted = z - 0.5 * np.minimum(anc_peak, z)
+    idx = np.argsort(-adjusted)[:top_k]
+    return [(int(j), float(z[j])) for j in idx if z[j] > 0.0]

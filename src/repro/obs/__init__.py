@@ -27,7 +27,8 @@ from __future__ import annotations
 import time
 from typing import Any, Dict
 
-from . import compile_log, metrics, trace
+from . import compile_log, metrics, ring, trace
+from .ring import BoundedRing  # noqa: F401
 from .trace import (  # noqa: F401  (re-exported convenience surface)
     enable,
     disable,
@@ -36,11 +37,15 @@ from .trace import (  # noqa: F401  (re-exported convenience surface)
     reset,
     roots,
     span,
+    to_chrome_trace,
+    write_chrome_trace,
 )
 
 __all__ = [
+    "BoundedRing",
     "compile_log",
     "metrics",
+    "ring",
     "trace",
     "enable",
     "disable",
@@ -51,6 +56,8 @@ __all__ = [
     "reset_all",
     "roots",
     "span",
+    "to_chrome_trace",
+    "write_chrome_trace",
 ]
 
 

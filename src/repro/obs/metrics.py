@@ -123,35 +123,75 @@ def snapshot() -> Dict[str, Dict[str, Any]]:
     return {"counters": counters, "gauges": gauges, "histograms": hists}
 
 
+def _escape_label_value(v: str) -> str:
+    """Prometheus text-format label-value escaping: backslash, double
+    quote, and newline must be escaped or the line breaks the scrape."""
+    return (
+        v.replace("\\", r"\\").replace('"', r"\"").replace("\n", r"\n")
+    )
+
+
+def _label_body(labels: Tuple) -> str:
+    if not labels:
+        return ""
+    body = ",".join(
+        f'{_sanitize(k)}="{_escape_label_value(v)}"' for k, v in labels
+    )
+    return "{" + body + "}"
+
+
 def to_prometheus_text() -> str:
-    """Prometheus text exposition of the current snapshot."""
-    snap = snapshot()
+    """Prometheus text exposition of the current state.
+
+    Emits one ``# HELP`` / ``# TYPE`` header per metric family (counter
+    families carry the ``_total`` suffix; histogram summaries surface as
+    per-stat gauge families) and escapes label values (backslash, quote,
+    newline), so the output scrapes cleanly even when labels carry
+    shapes, paths, or error strings.
+    """
+    with _lock:
+        counters = dict(_counters)
+        gauges = dict(_gauges)
+        hists = {
+            k: {"count": h.count, "sum": h.total,
+                "values": sorted(h.values)}
+            for k, h in _hists.items()
+        }
+
+    # family name -> (type, [(label_tuple, value)])
+    families: Dict[str, Tuple[str, list]] = {}
+
+    def add(family: str, kind: str, labels: Tuple, value) -> None:
+        fam = families.setdefault(family, (kind, []))
+        fam[1].append((labels, value))
+
+    for (name, *labels), v in counters.items():
+        add(_sanitize(name) + "_total", "counter", tuple(labels), v)
+    for (name, *labels), v in gauges.items():
+        add(_sanitize(name), "gauge", tuple(labels), v)
+    for (name, *labels), h in hists.items():
+        vals = h["values"]
+        stats = {
+            "count": h["count"], "sum": h["sum"],
+            "p50": _percentile(vals, 0.50), "p95": _percentile(vals, 0.95),
+            "p99": _percentile(vals, 0.99),
+            "max": vals[-1] if vals else 0.0,
+        }
+        for stat, value in stats.items():
+            add(f"{_sanitize(name)}_{stat}", "gauge", tuple(labels), value)
+
     lines = []
-
-    def emit(series: str, value) -> None:
-        name = series.split("{", 1)[0]
-        labels = series[len(name):]
-        lines.append(f"{_sanitize(name)}{labels} {value}")
-
-    for s, v in sorted(snap["counters"].items()):
-        emit(s + "_total" if "{" not in s else _with_suffix(s, "_total"), v)
-    for s, v in sorted(snap["gauges"].items()):
-        emit(s, v)
-    for s, h in sorted(snap["histograms"].items()):
-        for stat in ("count", "sum", "p50", "p95", "p99", "max"):
-            emit(_with_suffix(s, f"_{stat}"), h[stat])
+    for family in sorted(families):
+        kind, rows = families[family]
+        lines.append(f"# HELP {family} repro.obs {kind} series {family}")
+        lines.append(f"# TYPE {family} {kind}")
+        for labels, value in sorted(rows, key=lambda r: r[0]):
+            lines.append(f"{family}{_label_body(labels)} {value}")
     return "\n".join(lines) + ("\n" if lines else "")
 
 
 def _sanitize(name: str) -> str:
     return name.replace(".", "_").replace("-", "_")
-
-
-def _with_suffix(series: str, suffix: str) -> str:
-    if "{" in series:
-        name, rest = series.split("{", 1)
-        return f"{name}{suffix}{{{rest}"
-    return series + suffix
 
 
 def reset() -> None:

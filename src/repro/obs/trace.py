@@ -181,3 +181,45 @@ def format_tree(last: Optional[int] = None) -> str:
     for s in roots(last):
         _fmt_span(s, 0, lines)
     return "\n".join(lines) if lines else "(no spans recorded)"
+
+
+def to_chrome_trace(last: Optional[int] = None) -> Dict[str, Any]:
+    """Finished span trees as Chrome/Perfetto trace-event JSON.
+
+    Every span becomes one complete ("ph": "X") event with microsecond
+    timestamps rebased to the earliest recorded root, so the file drops
+    straight into ``chrome://tracing`` / https://ui.perfetto.dev.
+    Span attributes land in ``args`` (stringified — trace viewers want
+    flat JSON scalars); spans that ran at jax trace time keep their
+    ``traced`` tag as the event category.
+    """
+    spans = roots(last)
+    base = min((s.t0 for s in spans), default=0.0)
+    events: List[Dict[str, Any]] = []
+
+    def emit(s: Span) -> None:
+        events.append({
+            "name": s.name,
+            "cat": "jax-trace" if s.traced else "host",
+            "ph": "X",
+            "ts": (s.t0 - base) * 1e6,
+            "dur": s.duration_s * 1e6,
+            "pid": 0,
+            "tid": 0,
+            "args": {k: str(v) for k, v in s.attrs.items()},
+        })
+        for c in s.children:
+            emit(c)
+
+    for s in spans:
+        emit(s)
+    return {"traceEvents": events, "displayTimeUnit": "ms"}
+
+
+def write_chrome_trace(path: str, last: Optional[int] = None) -> str:
+    """Serialize :func:`to_chrome_trace` to ``path``; returns the path."""
+    import json
+
+    with open(path, "w") as f:
+        json.dump(to_chrome_trace(last), f, indent=1)
+    return path

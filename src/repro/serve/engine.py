@@ -18,6 +18,10 @@ sessions are bucketed by (residual shape, fit config) and executed
 through ``batched.fit_many_from_stats`` — a burst of due windows costs
 one device-parallel program, and each client gets back a
 :class:`~repro.stream.session.GraphDelta` rather than the full matrix.
+Monitored sessions (:mod:`repro.stream.monitor`) additionally score
+every chunk against the served graph; drift alerts make a session due
+immediately, ride out on its next delta, and are collectable through
+:meth:`CausalDiscoveryEngine.poll_alerts`.
 
 Fitted (or streaming) graphs are *queryable*: ``query`` admits a mixed
 micro-batch of effect / intervention / root-cause requests
@@ -201,7 +205,9 @@ class CausalDiscoveryEngine:
         self._next_sid = 0
         # Errors from the most recent flush_streams call (always kept,
         # telemetry on or off) — empty means every due refit landed.
-        self.last_flush_errors: List[FlushError] = []
+        # Bounded: a pathological flush over many sessions cannot grow
+        # the error record without limit (drops are counted).
+        self.last_flush_errors: obs.BoundedRing = obs.BoundedRing(256)
         self.queries = query_lib.QueryEngine(
             batch_size=batch_size,
             backend=self.config.backend,
@@ -365,7 +371,7 @@ class CausalDiscoveryEngine:
         failure falls back to per-session refits, so one poisoned plan
         cannot starve its bucket peers.
         """
-        self.last_flush_errors = []
+        self.last_flush_errors.clear()
         t_flush = time.perf_counter()
         due = [
             (sid, s) for sid, s in self._streams.items() if s.due
@@ -482,6 +488,30 @@ class CausalDiscoveryEngine:
                         self._streams[sid]
                     )
             return self.queries.run(queries)
+
+    def poll_alerts(
+        self, sid: Optional[str] = None
+    ) -> List[stream_session.monitor_lib.DriftAlert]:
+        """Drain unread drift alerts, oldest first.
+
+        ``sid`` scopes the drain to one session; None collects across
+        every admitted session. Each alert is delivered exactly once
+        here — the session's bounded ``alert_history`` keeps a copy for
+        post-hoc review, and alerts that *triggered* a refit also
+        travel on that refit's :class:`~repro.stream.session.GraphDelta`
+        from :meth:`flush_streams`. Sessions without a monitor simply
+        never yield alerts.
+        """
+        sessions = (
+            [self._streams[sid]] if sid is not None
+            else list(self._streams.values())
+        )
+        out: List[stream_session.monitor_lib.DriftAlert] = []
+        for s in sessions:
+            out.extend(s.unread_alerts.drain())
+        if out:
+            obs_metrics.inc("serve.alerts_polled", len(out))
+        return out
 
     def stream_session(self, sid: str) -> stream_session.StreamSession:
         """The live session object (last_fit / last_delta / state)."""

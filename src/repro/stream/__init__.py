@@ -9,8 +9,17 @@ serving sessions.
   * :mod:`repro.stream.session` — :class:`StreamSession` /
     :class:`GraphDelta`: the per-client state the serving engine
     admits and batch-refits.
+  * :mod:`repro.stream.monitor` — :class:`GraphHealthMonitor` /
+    :class:`DriftAlert`: sequential drift tests on the served graph's
+    structural noise, computed purely from chunk moment summaries.
 """
 
+from .monitor import (  # noqa: F401
+    DriftAlert,
+    GraphHealthMonitor,
+    MonitorConfig,
+    score_chunks_many,
+)
 from .session import (  # noqa: F401
     GraphDelta,
     StreamConfig,

@@ -15,6 +15,14 @@ sessions, groups their :class:`~repro.stream.window.RefitPlan`s by
 ``fit_many_from_stats`` path — one device-parallel program per burst of
 due windows. ``StreamSession.refit_now`` keeps a direct single-session
 path for library use.
+
+With a :class:`~repro.stream.monitor.MonitorConfig` attached, every
+posted chunk's moment summary is also scored against the currently
+served graph (:mod:`repro.stream.monitor` — no row re-reads), and the
+refit cadence becomes *adaptive*: a :class:`DriftAlert` makes the
+session due immediately, while alert-free refits whose graph barely
+moved let the cadence coast (doubling up to ``coast_max``) so stable
+streams stop paying for refits that change nothing.
 """
 
 from __future__ import annotations
@@ -27,6 +35,8 @@ import numpy as np
 
 from repro.core import api
 from repro.obs import metrics as obs_metrics
+from repro.obs.ring import BoundedRing
+from . import monitor as monitor_lib
 from . import window as window_lib
 
 
@@ -40,6 +50,13 @@ class StreamConfig:
     edge add/remove sets. ``reanchor_every`` (slides) caps moment-
     retraction drift on non-stationary streams (0 = never; see
     :mod:`repro.stream.stats` for when that is safe to leave off).
+
+    ``monitor`` attaches a graph-health monitor to the session (None =
+    no drift detection, fixed cadence). ``coast_max`` enables adaptive
+    cadence: after an alert-free refit whose adjacency moved by at most
+    ``delta_threshold``, the refit interval doubles, up to ``coast_max``
+    chunks; any drift alert resets it to ``refit_every`` and makes the
+    session due at once (0 = fixed cadence even when monitored).
     """
 
     d: int
@@ -50,6 +67,8 @@ class StreamConfig:
     delta_threshold: float = 0.05
     reanchor_every: int = 0
     fit: api.FitConfig = api.FitConfig(compaction="staged")
+    monitor: Optional[monitor_lib.MonitorConfig] = None
+    coast_max: int = 0
 
 
 @dataclasses.dataclass
@@ -62,14 +81,25 @@ class GraphDelta:
     removed: np.ndarray         # (r, 2) int edges newly below
     max_abs_change: float       # max |B0_new - B0_prev| (0.0 on first)
     frob_change: float          # ||B0_new - B0_prev||_F (0.0 on first)
+    drift_score: float = 0.0    # monitor level at refit time (1.0 = alarm)
+    triggered_by: str = "cadence"   # "cadence" | "alert"
+    alerts: List[monitor_lib.DriftAlert] = dataclasses.field(
+        default_factory=list)    # the alerts that forced this refit
 
     def summary(self) -> str:
-        return (
+        base = (
             f"refit {self.refit_index}: edges={self.n_edges} "
             f"+{len(self.added)}/-{len(self.removed)} "
             f"max|dB|={self.max_abs_change:.4f} "
             f"frob(dB)={self.frob_change:.4f}"
         )
+        if self.triggered_by == "alert" or self.drift_score > 0.0:
+            kinds = ",".join(sorted({a.kind for a in self.alerts})) or "-"
+            base += (
+                f" drift={self.drift_score:.2f} by={self.triggered_by}"
+                f"[{kinds}]"
+            )
+        return base
 
 
 def graph_delta(
@@ -119,6 +149,7 @@ class StreamSession:
         )
         self._chunks_since_refit = 0
         self.n_refits = 0
+        self.n_chunks = 0
         self.last_fit: Optional[window_lib.RollingFit] = None
         self.last_delta: Optional[GraphDelta] = None
         self._prev_adjacency: Optional[np.ndarray] = None
@@ -127,12 +158,43 @@ class StreamSession:
         # report the refit queue wait. Tracked unconditionally: two
         # attribute writes per transition, no clock reads off-path.
         self._due_since: Optional[float] = None
+        # Adaptive cadence: current refit interval in chunks. Fixed at
+        # refit_every unless coast_max > 0 (see apply_fit).
+        self._cadence = config.refit_every
+        mc = config.monitor
+        self.monitor: Optional[monitor_lib.GraphHealthMonitor] = (
+            monitor_lib.GraphHealthMonitor(mc, config.d, config.lags,
+                                           sid=sid)
+            if mc is not None else None
+        )
+        # pending: alerts that have not yet been answered by a refit
+        # (drives `due`; drained into the triggering GraphDelta).
+        # unread: alerts not yet collected through the engine's
+        # poll_alerts API. history: everything, for post-hoc review.
+        cap = mc.max_pending if mc else 1
+        hist = mc.history if mc else 1
+        self.pending_alerts: BoundedRing = BoundedRing(cap)
+        self.unread_alerts: BoundedRing = BoundedRing(cap)
+        self.alert_history: BoundedRing = BoundedRing(hist)
 
     def post(self, rows) -> bool:
-        """Absorb one chunk; returns True when a refit is now due."""
-        self.rolling.push(rows)
+        """Absorb one chunk; returns True when a refit is now due.
+
+        The chunk's moment summary (already produced by the rolling
+        window's slide — monitoring adds no data pass) is scored
+        against the served graph when a monitor is armed; any fired
+        alerts land in the session's alert rings and make it due.
+        """
+        chunk_state = self.rolling.push(rows)
+        self.n_chunks += 1
         if self.rolling.ready:
             self._chunks_since_refit += 1
+        if self.monitor is not None and self.monitor.armed:
+            self.absorb_alerts(self.monitor.update(
+                chunk_state,
+                chunk_index=self.n_chunks,
+                refit_index=self.n_refits,
+            ))
         obs_metrics.inc("stream.chunks", sid=self.sid)
         obs_metrics.gauge(
             "stream.staleness_chunks", self._chunks_since_refit,
@@ -142,6 +204,18 @@ class StreamSession:
             self._due_since = time.monotonic()
         return self.due
 
+    def absorb_alerts(self, alerts) -> None:
+        """File fired alerts; an alert resets any coasting cadence."""
+        for a in alerts:
+            self.pending_alerts.append(a)
+            self.unread_alerts.append(a)
+            self.alert_history.append(a)
+        if alerts:
+            self._cadence = self.config.refit_every
+            obs_metrics.gauge(
+                "stream.cadence_chunks", self._cadence, sid=self.sid,
+            )
+
     def due_wait_s(self, now: Optional[float] = None) -> Optional[float]:
         """Seconds this session has been due without a refit (None when
         not due). ``now`` lets a flush sample one clock for a batch."""
@@ -150,27 +224,69 @@ class StreamSession:
         return (time.monotonic() if now is None else now) - self._due_since
 
     @property
+    def cadence(self) -> int:
+        """Current refit interval in chunks (adaptive when coasting)."""
+        return self._cadence
+
+    @property
     def due(self) -> bool:
-        return (
-            self.rolling.ready
-            and self._chunks_since_refit >= self.config.refit_every
+        return self.rolling.ready and (
+            bool(self.pending_alerts)
+            or self._chunks_since_refit >= self._cadence
         )
 
     def apply_fit(self, fit: window_lib.RollingFit) -> GraphDelta:
         """Record a completed refit; returns the delta vs the previous
-        estimate (thresholded at ``config.delta_threshold``)."""
+        estimate (thresholded at ``config.delta_threshold``).
+
+        Closes out any pending drift alerts (they triggered this refit
+        and travel on the delta), re-arms the monitor on the fresh
+        estimate, and advances the adaptive cadence: alert-free refits
+        whose adjacency moved by at most ``delta_threshold`` double the
+        interval (up to ``coast_max``); anything else resets it.
+        """
+        triggered = list(self.pending_alerts.drain())
+        drift_score = (
+            self.monitor.max_score()
+            if self.monitor is not None and self.monitor.armed else 0.0
+        )
         b0 = np.asarray(fit.result.adjacency)
         delta = graph_delta(
             self._prev_adjacency, b0, self.config.delta_threshold,
             self.n_refits,
         )
+        delta.drift_score = drift_score
+        delta.triggered_by = "alert" if triggered else "cadence"
+        delta.alerts = triggered
         self._prev_adjacency = b0
         self.last_fit = fit
         self.last_delta = delta
         self.n_refits += 1
         self._chunks_since_refit = 0
         self._due_since = None
+        if self.monitor is not None:
+            self.monitor.arm(fit)
+        if self.config.coast_max > 0:
+            # Stability judged by the monitor when there is one — its
+            # drift level is calibrated to the served model, while raw
+            # adjacency deltas fluctuate with estimation noise at any
+            # cadence. Unmonitored sessions fall back to the delta.
+            stable = not triggered and (
+                drift_score < 0.5 if self.monitor is not None
+                else delta.max_abs_change <= self.config.delta_threshold
+            )
+            self._cadence = (
+                min(self._cadence * 2, self.config.coast_max) if stable
+                else self.config.refit_every
+            )
+            obs_metrics.gauge(
+                "stream.cadence_chunks", self._cadence, sid=self.sid,
+            )
         obs_metrics.inc("stream.refits", sid=self.sid)
+        obs_metrics.inc(
+            "stream.refits_by_trigger", trigger=delta.triggered_by,
+            sid=self.sid,
+        )
         obs_metrics.gauge("stream.staleness_chunks", 0, sid=self.sid)
         return delta
 

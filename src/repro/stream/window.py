@@ -172,6 +172,9 @@ class RollingFit:
     thetas: List[np.ndarray]    # [theta_0 (= B0), theta_1, ..., theta_k]
     var_coefs: np.ndarray       # [k, d, d] raw VAR coefficients
     n_rows: int                 # augmented rows in the window
+    intercept: Optional[np.ndarray] = None  # (d,) VAR intercept — the
+    #                             served-graph parameter the drift
+    #                             monitor needs to score new chunks
 
 
 def finish_refit(plan: RefitPlan, result: api.FitResult) -> RollingFit:
@@ -187,6 +190,7 @@ def finish_refit(plan: RefitPlan, result: api.FitResult) -> RollingFit:
         thetas=thetas,
         var_coefs=mats,
         n_rows=int(plan.resid.shape[0]),
+        intercept=np.asarray(plan.intercept),
     )
 
 
@@ -251,9 +255,16 @@ class RollingVarLiNGAM:
         """Whether a full window is buffered (refits allowed)."""
         return self.ring.full
 
-    def push(self, rows) -> None:
+    def push(self, rows) -> stats.MomentState:
         """Slide the window by one chunk: absorb ``rows``' augmented
-        moments, retract the evicted chunk's."""
+        moments, retract the evicted chunk's.
+
+        Returns the absorbed chunk's own augmented :class:`~repro.
+        stream.stats.MomentState` — the summary this slide computed
+        anyway (``update_chunk`` is ``merge(state, from_chunk(rows))``
+        unrolled). The drift monitor scores served graphs from exactly
+        this object, so monitoring never re-reads the chunk's rows.
+        """
         # Copy unconditionally: the ring and tails hold these rows until
         # retraction, so aliasing a caller-reused buffer would silently
         # corrupt the window.
@@ -265,9 +276,10 @@ class RollingVarLiNGAM:
         buf = rows if self._prev_tail is None else np.concatenate(
             [self._prev_tail, rows]
         )
-        self.aug_state = stats.update_chunk(
-            self.aug_state, lagged_rows(buf, self.lags)
+        chunk_state = stats.from_chunk(
+            jnp.asarray(lagged_rows(buf, self.lags))
         )
+        self.aug_state = stats.merge(self.aug_state, chunk_state)
         evicted = self.ring.push(rows)
         if evicted is not None:
             ebuf = evicted if self._lead_tail is None else np.concatenate(
@@ -286,6 +298,7 @@ class RollingVarLiNGAM:
             and self.n_pushed % self.reanchor_every == 0
         ):
             self.reanchor()
+        return chunk_state
 
     def _window_bufs(self):
         """Live blocks with their lag context, oldest -> newest."""

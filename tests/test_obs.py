@@ -174,6 +174,98 @@ def test_prometheus_text_format():
     assert text.endswith("\n")
 
 
+def test_prometheus_help_type_headers_once_per_family():
+    obs.enable()
+    metrics.inc("serve.requests", 2, kind="fit")
+    metrics.inc("serve.requests", 3, kind="flush")
+    metrics.gauge("stream.cadence_chunks", 8, sid="s0")
+    text = metrics.to_prometheus_text()
+    assert text.count("# TYPE serve_requests_total counter") == 1
+    assert text.count("# HELP serve_requests_total ") == 1
+    assert text.count("# TYPE stream_cadence_chunks gauge") == 1
+    lines = text.splitlines()
+    # Headers precede their family's sample lines.
+    t = lines.index("# TYPE serve_requests_total counter")
+    assert lines[t + 1].startswith("serve_requests_total{")
+    assert lines[t + 2].startswith("serve_requests_total{")
+
+
+def test_prometheus_escapes_label_values():
+    obs.enable()
+    metrics.inc("serve.flush_errors", 1,
+                error='shape ("x", 2)\nmismatch \\ bad')
+    text = metrics.to_prometheus_text()
+    assert (
+        r'serve_flush_errors_total{error="shape (\"x\", 2)\n'
+        r'mismatch \\ bad"} 1.0' in text
+    )
+    assert "\nmismatch" not in text  # no raw newline inside a sample
+
+
+def test_chrome_trace_events():
+    obs.enable()
+    with obs.span("serve.flush", n_due=3):
+        with obs.span("serve.flush_bucket", shape=(6, 6)):
+            time.sleep(0.002)
+    doc = obs.to_chrome_trace()
+    assert doc["displayTimeUnit"] == "ms"
+    by_name = {e["name"]: e for e in doc["traceEvents"]}
+    assert set(by_name) == {"serve.flush", "serve.flush_bucket"}
+    outer, inner = by_name["serve.flush"], by_name["serve.flush_bucket"]
+    for e in (outer, inner):
+        assert e["ph"] == "X"
+        assert e["cat"] in ("host", "jax-trace")
+        assert e["pid"] == 0 and e["tid"] == 0
+    # Child nests inside the parent on the timeline, timestamps
+    # rebased to the earliest root.
+    assert outer["ts"] == 0.0
+    assert inner["ts"] >= outer["ts"]
+    assert inner["ts"] + inner["dur"] <= outer["ts"] + outer["dur"] + 1.0
+    assert inner["args"] == {"shape": "(6, 6)"}  # attrs stringified
+
+
+def test_write_chrome_trace_roundtrip(tmp_path):
+    obs.enable()
+    with obs.span("fit", d=4):
+        pass
+    path = obs.write_chrome_trace(str(tmp_path / "trace.json"))
+    with open(path) as f:
+        doc = json.load(f)
+    assert doc["traceEvents"][0]["name"] == "fit"
+
+
+# ---------------------------------------------------------------------------
+# BoundedRing
+# ---------------------------------------------------------------------------
+
+
+def test_bounded_ring_caps_and_counts_drops():
+    ring = obs.BoundedRing(3)
+    for i in range(5):
+        ring.append(i)
+    assert list(ring) == [2, 3, 4]  # oldest evicted first
+    assert len(ring) == 3
+    assert ring.dropped == 2
+    assert ring[0] == 2 and ring[-1] == 4
+    assert ring[1:] == [3, 4]
+    assert bool(ring)
+    ring.clear()
+    assert not ring and ring.dropped == 0
+
+
+def test_bounded_ring_drain_empties_oldest_first():
+    ring = obs.BoundedRing(8)
+    ring.extend("abc")
+    assert ring.drain() == ["a", "b", "c"]
+    assert ring.drain() == []
+    assert not ring
+
+
+def test_bounded_ring_rejects_nonpositive_capacity():
+    with pytest.raises(ValueError):
+        obs.BoundedRing(0)
+
+
 # ---------------------------------------------------------------------------
 # jit-safety: bit-identical results, equal compile counts, bounded cost
 # ---------------------------------------------------------------------------
