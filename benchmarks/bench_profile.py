@@ -1,0 +1,40 @@
+"""Cost-accounting rows: stage attribution + kernel utilization
+-> BENCH_profile.json.
+
+Runs the roofline attribution engine
+(:func:`repro.analysis.report.live_attribution`) at a quick (or
+paper-leaning) shape and emits its stage rows (ordering / pruning /
+solve / full_fit: seconds, FLOPs, bytes, GFLOP/s, %-of-roofline) and
+per-kernel-variant utilization rows. ``analysis/regress.py`` tracks the
+``best_s`` / ``gflops_per_s`` columns; the cost columns are
+provenance-style context (they move with the device-peaks registry, not
+the code, so they are skip-listed from pass/fail).
+
+Run via ``python -m benchmarks.run --only profile``. On CPU the
+roofline fractions are against the placeholder cpu-generic peaks —
+comparative, not certified; calibrate with ``REPRO_PEAKS``.
+"""
+
+from __future__ import annotations
+
+
+def run(quick: bool = True):
+    from repro.analysis import report
+    from repro.obs import profile
+
+    profile.reset()
+    m, d = (512, 16) if quick else (2048, 64)
+    payload = report.live_attribution(
+        m, d, backend="blocked", repeats=2, include_pallas=quick,
+    )
+    for row in payload["rows"]:
+        print(f"bench_profile,stage={row['stage']},"
+              f"best_s={row['best_s']:.6f},"
+              f"gflops_per_s={row['gflops_per_s']:.4f},"
+              f"roofline_frac={row['roofline_frac']:.4f}")
+    for row in payload["kernels"]:
+        print(f"bench_profile,variant={row['variant']},"
+              f"best_s={row['best_s']:.6f},"
+              f"gflops_per_s={row['gflops_per_s']:.4f},"
+              f"roofline_frac={row['roofline_frac']:.4f}")
+    return payload

@@ -25,8 +25,8 @@ from benchmarks import (  # noqa: E402
     bench_equivalence,
     bench_gene,
     bench_infer,
-    bench_models,
     bench_notears,
+    bench_profile,
     bench_sharded,
     bench_speedup,
     bench_stocks,
@@ -40,13 +40,13 @@ BENCHES = {
     "notears": bench_notears.run,          # paper §3.1
     "gene": bench_gene.run,                # paper Table 1
     "stocks": bench_stocks.run,            # paper Fig. 4 / Table 2
-    "models": bench_models.run,            # substrate throughput smoke
     "bootstrap": bench_bootstrap.run,      # loop vs vmap-batched engine
     "sharded": bench_sharded.run,          # mesh-plan sweep vs 1-dev oracle
     "stream": bench_stream.run,            # rolling-window vs from-scratch
     "tune": bench_tune.run,                # heuristic vs tuned kernel plans
     "infer": bench_infer.run,              # batched queries vs per-query loop
     "drift": bench_drift.run,              # drift detection + refit savings
+    "profile": bench_profile.run,          # cost accounting + roofline rows
 }
 
 # Benchmark name -> repo-root artifact stem (BENCH_<stem>.json).
@@ -61,17 +61,28 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sizes (slow on CPU)")
     ap.add_argument("--only", type=str, default=None)
+    ap.add_argument("--profile", action="store_true",
+                    help="enable repro.obs.profile for every bench and "
+                         "stamp artifact rows with captured cost fields "
+                         "(flops/bytes/utilization)")
     ap.add_argument("--out", type=str, default=None,
                     help="optional aggregate JSON (per-bench artifacts "
                          "always land as repo-root BENCH_*.json)")
     args = ap.parse_args()
 
+    from repro.obs import profile as obs_profile  # noqa: E402,PLC0415
+
+    if args.profile:
+        obs_profile.enable()
+
     results = {}
+    profiles = {}
     for name, fn in BENCHES.items():
         if args.only and name != args.only:
             continue
         t0 = time.time()
         print(f"=== bench:{name} ===")
+        obs_profile.reset()
         try:
             results[name] = fn(quick=not args.full)
         except Exception as e:  # noqa: BLE001
@@ -79,6 +90,8 @@ def main() -> None:
 
             traceback.print_exc()
             results[name] = {"error": str(e)}
+        if args.profile:
+            profiles[name] = obs_profile.snapshot()
         print(f"=== bench:{name} done in {time.time()-t0:.1f}s ===\n")
 
     def default(o):
@@ -93,6 +106,44 @@ def main() -> None:
     from repro import obs  # noqa: E402,PLC0415
 
     prov = obs.provenance(repo_root=_REPO_ROOT)
+
+    def stamp_rows(payload: dict, snap: dict) -> dict:
+        """Join captured cost records onto a payload's row dicts.
+
+        A row matches a record on its ``op`` field (and, when both carry
+        one, its ``shape``); matched rows gain flops/bytes/temp_bytes
+        and the utilization columns. The full record table also lands
+        under ``payload["profile"]`` so unjoined costs aren't dropped.
+        """
+        records = snap.get("records", [])
+        by_op = {}
+        for rec in records:
+            by_op.setdefault(rec["op"], []).append(rec)
+
+        def stamp(node):
+            if isinstance(node, list):
+                for item in node:
+                    stamp(item)
+            elif isinstance(node, dict):
+                cands = by_op.get(node.get("op"), [])
+                hit = None
+                for rec in cands:
+                    if "shape" in node and list(node["shape"]) != rec["shape"]:
+                        continue
+                    hit = rec
+                    break
+                if hit is not None:
+                    for k in ("flops", "bytes", "temp_bytes",
+                              "gflops_per_s", "gbytes_per_s",
+                              "roofline_frac", "bound"):
+                        if k in hit and k not in node:
+                            node[k] = hit[k]
+                for v in node.values():
+                    stamp(v)
+
+        stamp(payload.get("rows"))
+        payload["profile"] = snap
+        return payload
 
     def write_artifact(stem: str, payload: dict) -> None:
         """Mirror one benchmark's results to BENCH_<stem>.json at the
@@ -118,6 +169,8 @@ def main() -> None:
         if isinstance(res, dict) and "error" in res:
             continue
         payload = res if isinstance(res, dict) else {"rows": res}
+        if args.profile and name in profiles:
+            payload = stamp_rows(dict(payload), profiles[name])
         write_artifact(ARTIFACTS[name], payload)
 
     if args.out:

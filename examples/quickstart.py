@@ -1,6 +1,6 @@
 """Quickstart: causal discovery with AcceleratedLiNGAM on TPU/CPU.
 
-    PYTHONPATH=src python examples/quickstart.py [--telemetry]
+    PYTHONPATH=src python examples/quickstart.py [--telemetry] [--profile]
 
 Simulates data from a known layered DAG (paper §3.1 protocol), runs the
 parallel DirectLiNGAM, verifies it against the sequential reference,
@@ -14,6 +14,13 @@ query) with the observability layer on (:mod:`repro.obs`), then prints
 the span tree, the metrics snapshot, and the compile-event log —
 covering kernel dispatch -> ordering -> pruning -> serve flush ->
 query.
+
+With ``--profile`` it runs the performance-accounting layer
+(:mod:`repro.obs.profile`): a profiled fit inside a correlated
+host+device trace window, the stage-attribution table (seconds, FLOPs,
+%-of-roofline per stage and kernel variant), and the captured cost
+records — writing the device trace (Perfetto) next to the host span
+trace under the ``--profile-out`` directory.
 """
 
 import argparse
@@ -168,6 +175,54 @@ def telemetry_demo(out_dir=None):
               f"ui.perfetto.dev) and {metrics_path}")
 
 
+def profile_demo(out_dir=None):
+    """Profiled fit + stage attribution + correlated device trace.
+
+    ``out_dir`` receives ``trace_events.json`` (host spans, Chrome
+    trace-event format), a ``device_trace/`` directory (the
+    ``jax.profiler`` Perfetto/XPlane timeline with host span names
+    mirrored as TraceAnnotations), and ``profile_snapshot.json`` (the
+    captured cost records + device peaks).
+    """
+    import json
+    import os
+
+    from repro import obs
+    from repro.analysis import report
+    from repro.obs import profile
+
+    obs.enable()
+    profile.enable()
+    obs.reset_all()
+
+    print("\n=== Profiling: cost capture + roofline attribution ===")
+    if out_dir is not None:
+        os.makedirs(out_dir, exist_ok=True)
+        with profile.device_trace(os.path.join(out_dir, "device_trace")):
+            payload = report.live_attribution(m=512, d=16, repeats=2)
+    else:
+        payload = report.live_attribution(m=512, d=16, repeats=2)
+    print(report.render(payload))
+
+    print("\n--- captured cost records ---")
+    for rec in profile.records():
+        print(f"  {rec.op} shape={rec.shape} flops={rec.flops:.3g} "
+              f"bytes={rec.bytes_accessed:.3g} temp={rec.temp_bytes} "
+              f"calls={rec.calls} best={rec.best_s * 1e3:.2f}ms")
+
+    if out_dir is not None:
+        trace_path = obs.write_chrome_trace(
+            os.path.join(out_dir, "trace_events.json")
+        )
+        snap_path = os.path.join(out_dir, "profile_snapshot.json")
+        with open(snap_path, "w") as f:
+            json.dump(profile.snapshot(), f, indent=1)
+        print(f"\nwrote {trace_path}, {snap_path}, and "
+              f"{os.path.join(out_dir, 'device_trace')}/ "
+              f"(open both traces in ui.perfetto.dev to correlate "
+              f"host spans with the device timeline)")
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--telemetry", action="store_true",
@@ -176,7 +231,15 @@ if __name__ == "__main__":
     ap.add_argument("--telemetry-out", type=str, default="telemetry_out",
                     help="directory for --telemetry artifacts "
                          "(chrome trace + metrics snapshot)")
+    ap.add_argument("--profile", action="store_true",
+                    help="run the profiled fit: stage-attribution table, "
+                         "cost records, correlated host+device trace")
+    ap.add_argument("--profile-out", type=str, default="profile_out",
+                    help="directory for --profile artifacts "
+                         "(host trace, device trace, cost snapshot)")
     args = ap.parse_args()
     main()
     if args.telemetry:
         telemetry_demo(out_dir=args.telemetry_out)
+    if args.profile:
+        profile_demo(out_dir=args.profile_out)

@@ -48,13 +48,18 @@ STEM_TO_BENCH = {
     "kernels": "tune",
     "infer": "infer",
     "drift": "drift",
+    "profile": "profile",
 }
 
 # Row fields that identify a row across runs (never treated as metrics).
 _ID_KEYS = ("op", "bucket", "cell", "kind", "mesh", "name", "backend",
-            "variant", "m", "d", "n_queries", "n_sampling", "shape")
+            "variant", "m", "d", "n_queries", "n_sampling", "shape", "stage")
 _SKIP_KEYS = {"bench", "quick", "timestamp", "provenance", "device_kind",
-              "n_candidates", "bi", "bj", "bm", "block"}
+              "n_candidates", "bi", "bj", "bm", "block",
+              # cost-accounting fields: descriptive, not pass/fail perf
+              # (utilization moves with the peaks registry, not the code)
+              "flops", "bytes", "arg_bytes", "out_bytes", "temp_bytes",
+              "vmem_model_bytes", "intensity", "roofline_frac", "device"}
 
 
 def _direction(key: str) -> Optional[Tuple[str, float]]:

@@ -1,198 +1,283 @@
-"""Roofline report generator: merges dry-run JSON (compile proof, HLO
-collective structure, memory analysis) with the analytic cost model into
-the EXPERIMENTS.md §Dry-run and §Roofline tables.
+"""Roofline attribution report: where a fit's seconds and FLOPs go.
 
-  PYTHONPATH=src python -m repro.analysis.report \
-      --dryrun experiments/dryrun_pod.json experiments/dryrun_multipod.json \
-      --out experiments/roofline.md
+Splits a full DirectLiNGAM fit into its ordering / pruning / solve
+stages and reports, per stage and per kernel variant: wall seconds,
+FLOPs, bytes, achieved GFLOP/s, and fraction of the device roofline
+(:mod:`repro.obs.profile` supplies cost capture and the device-peaks
+registry). Two modes::
+
+  PYTHONPATH=src python -m repro.analysis.report --roofline
+      # live: run a small profiled fit and print the attribution tables
+
+  PYTHONPATH=src python -m repro.analysis.report --roofline --smoke
+      # CI: render + validate the committed BENCH_profile.json artifact
+      # (no jit work); nonzero exit on a missing/broken artifact
+
+The live path is also the engine of ``benchmarks/bench_profile.py``
+(artifact ``BENCH_profile.json``), so the committed rows and this CLI
+always agree on schema.
 """
 
 from __future__ import annotations
 
 import argparse
+import functools
 import json
-from typing import Dict, List
+import sys
+from pathlib import Path
+from typing import Any, Dict, List, Optional
 
-from repro.analysis import roofline
-from repro.analysis.analytic_cost import analytic_collectives, cell_cost
-from repro.configs.base import SHAPES, ShapeConfig, get_arch
+_REPO_ROOT = Path(__file__).resolve().parents[3]
 
-
-def _fmt_s(x: float) -> str:
-    if x == 0:
-        return "0"
-    if x < 1e-3:
-        return f"{x*1e6:.1f}us"
-    if x < 1.0:
-        return f"{x*1e3:.2f}ms"
-    return f"{x:.2f}s"
+#: Stage rows must carry these keys — ``--smoke`` validates the
+#: committed artifact against them (regress.py tracks best_s/gflops).
+STAGE_KEYS = ("stage", "best_s", "flops", "bytes",
+              "gflops_per_s", "roofline_frac", "bound")
 
 
-def _fmt_b(x: float) -> str:
-    for unit, div in (("GB", 1e9), ("MB", 1e6), ("KB", 1e3)):
-        if x >= div:
-            return f"{x/div:.2f}{unit}"
-    return f"{x:.0f}B"
+def _stage_fns():
+    """Jitted per-stage programs sharing the full fit's arithmetic."""
+    import jax
+    import jax.numpy as jnp
 
+    from repro.core import api, pruning
 
-def cell_roofline(arch: str, shape_name: str, mesh_kind: str,
-                  *, moe_impl: str = "scatter", **variant) -> Dict:
-    """Analytic three-term roofline for one cell."""
-    if arch.startswith(("lingam", "varlingam")):
-        raise ValueError("use lingam_roofline")
-    cfg = get_arch(arch)
-    shape = SHAPES[shape_name]
-    n_pod = 2 if mesh_kind == "multipod" else 1
-    nb = 16 * n_pod
-    cost = cell_cost(cfg, shape, n_model=16, n_batch_shards=nb,
-                     moe_impl=moe_impl, **variant)
-    coll = analytic_collectives(cfg, shape, n_model=16, n_batch_shards=nb,
-                                n_pod=n_pod)
-    coll_dev = sum(coll.values())
-    terms = roofline.roofline_terms(
-        cost["flops_per_dev"], cost["bytes_per_dev"], coll_dev
-    )
-    mf = roofline.model_flops(
-        cfg, shape, cost["n_params"], _active_params(cfg, cost["n_params"])
-    )
-    chips = 256 * n_pod
-    return {
-        "arch": arch,
-        "shape": shape_name,
-        "mesh": mesh_kind,
-        "chips": chips,
-        "flops_per_dev": cost["flops_per_dev"],
-        "bytes_per_dev": cost["bytes_per_dev"],
-        "coll_per_dev": coll_dev,
-        "coll_parts": coll,
-        "terms": terms,
-        "model_flops_per_dev": mf / chips,
-        "useful_ratio": (mf / chips) / max(cost["flops_per_dev"], 1.0),
-        "mfu_bound": (mf / chips) / roofline.PEAK_FLOPS
-        / max(terms["bound_s"], 1e-30),
-        "n_params": cost["n_params"],
-        "flops_components": cost["flops_components"],
-        "bytes_components": cost["bytes_components"],
-    }
+    @functools.partial(jax.jit, static_argnames=("config",))
+    def ordering_fn(x, config):
+        return api._order_for_config(x.astype(jnp.float32), config)
 
-
-def _active_params(cfg, total: float) -> float:
-    if cfg.n_experts == 0:
-        return total
-    from repro.models.moe import n_experts_padded
-
-    pattern_moe = cfg.n_layers // cfg.moe_every
-    mats = 3 if cfg.mlp == "swiglu" else 2
-    e = n_experts_padded(cfg)
-    expert_params = pattern_moe * e * mats * cfg.d_model * cfg.d_ff_expert
-    active_expert = expert_params * cfg.n_experts_active / e
-    return total - expert_params + active_expert
-
-
-def lingam_roofline(name: str, m: int, d: int, mesh_kind: str,
-                    chunk: int = 512) -> Dict:
-    """Three-term roofline for the sharded causal-ordering scan.
-
-    Per ordering step (d steps total), per device:
-      flops: correlation matmul 2*m*d^2 / P  +  pair moments ~30*m*d^2 / P
-             (logcosh+uexp ~ 30 flops per (pair, sample))
-      bytes: X read twice (standardize + moments) * d/tile reuse:
-             blocked rows re-read X per row-tile => (d_tile_loops) reads
-      coll:  psum(C) d^2*4 + psum(M tiles) 2*d^2*4/nm + all-gather 2*d^2*4
-    """
-    n_pod = 2 if mesh_kind == "multipod" else 1
-    chips = 256 * n_pod
-    nm = 16
-    nb = 16 * n_pod
-    m_loc = m / nb
-    tile = -(-d // nm)
-    flops_dev = d * (2.0 * m * d / chips + 30.0 * m_loc * tile * d)
-    # bytes: per step, each device streams its X slab once per chunk pass
-    # for the moment computation + once for standardize/correlation.
-    bytes_dev = d * (3.0 * m_loc * d * 4.0)
-    coll_dev = d * (d * d * 4.0 * (1.0 + 2.0 / nm + 2.0))
-    terms = roofline.roofline_terms(flops_dev, bytes_dev, coll_dev)
-    # useful work per step: correlation 2*m*d^2 + moment math 14*m*d^2,
-    # x d ordering steps
-    mf = d * (2.0 * m * d * d + 14.0 * m * d * d)
-    return {
-        "arch": name, "shape": "ordering", "mesh": mesh_kind, "chips": chips,
-        "flops_per_dev": flops_dev, "bytes_per_dev": bytes_dev,
-        "coll_per_dev": coll_dev, "terms": terms,
-        "model_flops_per_dev": mf * d / chips / d,  # = mf/chips
-        "useful_ratio": (mf / chips) / max(flops_dev, 1.0),
-        "n_params": float(d * d),
-    }
-
-
-def make_tables(dryrun_files: List[str]) -> str:
-    rows = []
-    for f in dryrun_files:
-        with open(f) as fh:
-            rows.extend(json.load(fh))
-
-    lines = ["## §Dry-run (compile proof + HLO evidence)", ""]
-    lines.append(
-        "| arch | shape | mesh | chips | compile_s | HLO flops/dev | "
-        "HLO coll bytes/dev (parsed) | arg bytes/dev |"
-    )
-    lines.append("|---|---|---|---|---|---|---|---|")
-    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
-        lines.append(
-            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['chips']} | "
-            f"{r['compile_s']} | {r['flops_per_dev']:.3e} | "
-            f"{_fmt_b(r['collective_total_per_dev'])} | "
-            f"{_fmt_b(r.get('arg_bytes_per_dev', 0))} |"
+    @functools.partial(jax.jit, static_argnames=("config",))
+    def pruning_fn(x, order, config):
+        return pruning.estimate_adjacency(
+            x.astype(jnp.float32), order,
+            method=config.prune_method, threshold=config.prune_threshold,
+            **config.prune_kwargs_dict,
         )
-    lines.append("")
-    lines.append(
-        "*HLO columns are from `compiled.cost_analysis()` / parsed "
-        "partitioned HLO and count while-loop bodies once (XLA semantics); "
-        "the §Roofline table uses the trip-count-exact analytic model.*"
-    )
 
-    lines += ["", "## §Roofline (analytic, per chip)", ""]
-    lines.append(
-        "| arch | shape | mesh | compute | memory | collective | dominant | "
-        "bound | MODEL_FLOPs/HLO ratio | roofline fraction |"
+    @jax.jit
+    def solve_fn(x, b):
+        x = x.astype(jnp.float32)
+        xc = x - jnp.mean(x, axis=0, keepdims=True)
+        resid = xc - xc @ b.T
+        return jnp.mean(resid * resid, axis=0)
+
+    return ordering_fn, pruning_fn, solve_fn
+
+
+def _record_row(label: str, rec) -> Dict[str, Any]:
+    from repro.obs import profile
+
+    row = {"stage": label, **rec.row(profile.device_peaks())}
+    row.pop("op", None)
+    row.pop("config", None)
+    return row
+
+
+def live_attribution(
+    m: int = 512, d: int = 16, *,
+    backend: Optional[str] = None, compaction: str = "staged",
+    repeats: int = 2, include_pallas: bool = True,
+) -> Dict[str, Any]:
+    """Run one profiled fit; return {rows, kernels, device}.
+
+    Stages re-execute the fit's three phases as separate jitted
+    programs (ordering scan, adjacency solve, residual diagnostics)
+    plus the fused ``full_fit`` — so per-stage seconds are directly
+    comparable and their sum bounds the fused time from above.
+    ``repeats`` timed calls per stage; best-of is reported.
+    """
+    import dataclasses
+
+    import numpy as np
+
+    from repro.core import api
+    from repro.obs import profile
+
+    profile.enable()
+    cfg = api.FitConfig(backend=backend, compaction=compaction)
+    rng = np.random.default_rng(0)
+    # Upper-triangular SEM: x_j = sum_{k<j} w x_k + laplace noise.
+    w = np.triu(rng.uniform(0.3, 0.8, (d, d)), 1) * \
+        (rng.random((d, d)) < 0.4)
+    e = rng.laplace(size=(m, d)).astype(np.float32)
+    x = np.linalg.solve(np.eye(d) - w.T, e.T).T.astype(np.float32)
+
+    ordering_fn, pruning_fn, solve_fn = _stage_fns()
+
+    stages: List[Dict[str, Any]] = []
+    for _ in range(repeats):
+        order = profile.call(ordering_fn, x, cfg,
+                             op="report.ordering", shape=x.shape, config=cfg)
+        b = profile.call(pruning_fn, x, order, cfg,
+                         op="report.pruning", shape=x.shape, config=cfg)
+        profile.call(solve_fn, x, b,
+                     op="report.solve", shape=x.shape)
+        api.fit_fn(x, cfg)  # routes through profile as op="core.fit"
+    for label, op, key_cfg in (("ordering", "report.ordering", cfg),
+                               ("pruning", "report.pruning", cfg),
+                               ("solve", "report.solve", None)):
+        rec = profile.get(op, x.shape, key_cfg)
+        if rec is not None:
+            stages.append(_record_row(label, rec))
+    full = profile.get("core.fit", x.shape, cfg)
+    if full is not None:
+        stages.append(_record_row("full_fit", full))
+
+    kernels = kernel_variant_rows(
+        m, d, repeats=repeats, include_pallas=include_pallas
     )
-    lines.append("|---|---|---|---|---|---|---|---|---|---|")
-    seen = set()
-    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
-        key = (r["arch"], r["shape"], r["mesh"])
-        if key in seen:
+    return {
+        "m": m, "d": d,
+        "rows": stages,
+        "kernels": kernels,
+        "device": dataclasses.asdict(profile.device_peaks()),
+    }
+
+
+def kernel_variant_rows(
+    m: int, d: int, *, repeats: int = 2, include_pallas: bool = True,
+) -> List[Dict[str, Any]]:
+    """Per-kernel-variant utilization at one (m, d): each registered
+    ``pairwise_moments`` backend timed through the profiled path (the
+    Pallas variant runs interpreted on cpu — slow but measured)."""
+    import numpy as np
+
+    from repro.kernels import ops
+    from repro.kernels.tune import registry
+    from repro.obs import profile
+
+    profile.enable()
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(m, d)).astype(np.float32)
+    x_std = (x - x.mean(0)) / x.std(0)
+    c = (x_std.T @ x_std) / m
+
+    backends = ["blocked"] + (["pallas"] if include_pallas else [])
+    rows: List[Dict[str, Any]] = []
+    for backend in backends:
+        variant = registry.get_variant("pairwise_moments", backend).name
+        op = f"report.kernel.{backend}"
+        for _ in range(repeats):
+            profile.call(
+                ops.pairwise_moments, x_std, c,
+                op=op, shape=(m, d), backend=backend,
+            )
+        rec = profile.get(op, (m, d))
+        if rec is None:
             continue
-        seen.add(key)
-        if r["arch"].startswith(("lingam", "varlingam")):
-            from repro.launch.dryrun import LINGAM_CELLS
+        row = _record_row(variant, rec)
+        row["variant"] = row.pop("stage")
+        row["backend"] = backend
+        # The analytic model next to the measured numbers: how far the
+        # documented flop/byte budget sits from XLA's own count.
+        model = profile.analytic_cost("pairwise_moments", (m, d))
+        if model is not None:
+            row["model_flops"] = model["flops"]
+            row["model_intensity"] = model["intensity"]
+        rows.append(row)
+    return rows
 
-            m, d = next((m, d) for n, m, d in LINGAM_CELLS if n == r["arch"])
-            a = lingam_roofline(r["arch"], m, d, r["mesh"])
-        else:
-            a = cell_roofline(r["arch"], r["shape"], r["mesh"])
-        t = a["terms"]
-        frac = a.get("mfu_bound", a["useful_ratio"])
+
+def _fmt_table(rows: List[Dict[str, Any]], label_key: str) -> str:
+    head = (f"{'stage':<22} {'seconds':>10} {'GFLOP':>10} {'GB':>10} "
+            f"{'GFLOP/s':>10} {'%roof':>7} {'bound':>8}")
+    lines = [head, "-" * len(head)]
+    for r in rows:
         lines.append(
-            f"| {a['arch']} | {a['shape']} | {a['mesh']} | "
-            f"{_fmt_s(t['compute_s'])} | {_fmt_s(t['memory_s'])} | "
-            f"{_fmt_s(t['collective_s'])} | **{t['dominant']}** | "
-            f"{_fmt_s(t['bound_s'])} | {a['useful_ratio']:.2f} | "
-            f"{min(frac, 1.0):.2%} |"
+            f"{str(r.get(label_key, '?')):<22} "
+            f"{r.get('best_s', 0.0):>10.4g} "
+            f"{r.get('flops', 0.0) / 1e9:>10.4g} "
+            f"{r.get('bytes', 0.0) / 1e9:>10.4g} "
+            f"{r.get('gflops_per_s', 0.0):>10.3g} "
+            f"{100.0 * r.get('roofline_frac', 0.0):>6.2f}% "
+            f"{str(r.get('bound', '-')):>8}"
         )
     return "\n".join(lines)
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--dryrun", nargs="+", required=True)
-    ap.add_argument("--out", default=None)
-    args = ap.parse_args()
-    md = make_tables(args.dryrun)
+def render(payload: Dict[str, Any]) -> str:
+    dev = payload.get("device", {})
+    out = [
+        f"roofline attribution — m={payload.get('m')} d={payload.get('d')} "
+        f"device={dev.get('name', '?')} "
+        f"(peak {dev.get('flops_per_s', 0) / 1e9:.0f} GFLOP/s, "
+        f"{dev.get('hbm_bw', 0) / 1e9:.0f} GB/s)",
+        "",
+        "per-stage attribution:",
+        _fmt_table(payload.get("rows", []), "stage"),
+        "",
+        "per-kernel-variant utilization (pairwise_moments):",
+        _fmt_table(payload.get("kernels", []), "variant"),
+    ]
+    return "\n".join(out)
+
+
+def smoke(repo_root: Path = _REPO_ROOT) -> int:
+    """Validate + render the committed BENCH_profile.json (CI mode)."""
+    p = repo_root / "BENCH_profile.json"
+    if not p.exists():
+        print(f"error: {p} missing", file=sys.stderr)
+        return 1
+    try:
+        payload = json.loads(p.read_text())
+    except ValueError as e:
+        print(f"error: {p} unparsable: {e}", file=sys.stderr)
+        return 1
+    rows = payload.get("rows", [])
+    kernels = payload.get("kernels", [])
+    broken = 0
+    for row in rows:
+        missing = [k for k in STAGE_KEYS if k not in row]
+        if missing:
+            print(f"error: stage row {row.get('stage', '?')!r} missing "
+                  f"{missing}", file=sys.stderr)
+            broken += 1
+    if not rows:
+        print("error: BENCH_profile.json has no stage rows", file=sys.stderr)
+        broken += 1
+    if not kernels:
+        print("error: BENCH_profile.json has no kernel rows",
+              file=sys.stderr)
+        broken += 1
+    print(render(payload))
+    print(f"\nsmoke: {len(rows)} stage rows, {len(kernels)} kernel rows, "
+          f"{'OK' if not broken else 'BROKEN'}")
+    return 1 if broken else 0
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Per-stage / per-kernel roofline attribution report.")
+    ap.add_argument("--roofline", action="store_true",
+                    help="produce the attribution report (the only mode)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="validate + render committed BENCH_profile.json "
+                         "instead of running a live fit")
+    ap.add_argument("--m", type=int, default=512)
+    ap.add_argument("--d", type=int, default=16)
+    ap.add_argument("--backend", type=str, default=None,
+                    help="force the fit backend (default: registry pick)")
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="skip the (interpreted-on-cpu) Pallas variant row")
+    ap.add_argument("--out", type=str, default=None,
+                    help="also write the payload as JSON")
+    args = ap.parse_args(argv)
+
+    if not args.roofline:
+        ap.error("nothing to do: pass --roofline")
+    if args.smoke:
+        return smoke()
+
+    payload = live_attribution(
+        args.m, args.d, backend=args.backend,
+        include_pallas=not args.no_pallas,
+    )
+    print(render(payload))
     if args.out:
-        with open(args.out, "w") as f:
-            f.write(md)
-    print(md)
+        Path(args.out).write_text(json.dumps(payload, indent=1))
+        print(f"\nwrote {args.out}")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -1,157 +1,58 @@
-"""Roofline-term derivation from compiled dry-run artifacts.
+"""Roofline-term derivation over the device-peaks registry.
 
-Per (arch x shape x mesh) cell:
+Per (kernel x shape x mesh) cell:
 
-    compute term    = HLO_FLOPs_global   / (chips * PEAK_FLOPS)
-    memory term     = HLO_bytes_global   / (chips * HBM_BW)
-    collective term = collective_bytes_global / (chips * ICI_BW)
+    compute term    = FLOPs_per_device       / peak_flops
+    memory term     = bytes_per_device       / hbm_bw
+    collective term = collective_bytes_per_device / ici_bw
 
-``compiled.cost_analysis()`` reports the *per-device* (SPMD-partitioned)
-module; we multiply by the mesh size to get global numbers, so the terms
-above are per-chip seconds either way. Collective bytes are not in
-cost_analysis: we parse the post-partitioning HLO
-(``compiled.as_text()``), build a name->bytes table from every
-instruction's result shape, and sum the **operand** sizes of each
-all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+The peaks come from :func:`repro.obs.profile.device_peaks` — detected
+from ``jax.devices()[0].device_kind`` (cpu/gpu/tpu entries, first
+substring match wins) with ``REPRO_PEAKS`` field overrides — instead of
+the hardwired TPU-v5e constants this module used to carry. FLOPs/bytes
+come from ``compiled.cost_analysis()`` or the analytic moment-kernel
+model (:func:`repro.obs.profile.analytic_cost`); collective bytes from
+the optimized-HLO parser (:func:`repro.obs.profile.collective_bytes`,
+which lives in the profile layer because cost capture feeds it
+automatically).
 
-Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+``python -m repro.analysis.report --roofline`` renders the per-stage
+attribution table built on these terms.
 """
 
 from __future__ import annotations
 
-import re
-from typing import Dict
+from typing import Dict, Optional
 
-PEAK_FLOPS = 197e12  # bf16 per chip
-HBM_BW = 819e9       # bytes/s per chip
-ICI_BW = 50e9        # bytes/s per link
-
-_DTYPE_BYTES = {
-    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
-    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
-    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
-    "c64": 8, "c128": 16, "token": 0,
-}
-
-_COLLECTIVES = (
-    "all-gather",
-    "all-reduce",
-    "reduce-scatter",
-    "all-to-all",
-    "collective-permute",
+from repro.obs.profile import (  # noqa: F401  (re-exported surface)
+    DevicePeaks,
+    analytic_cost,
+    collective_bytes,
+    device_peaks,
+    utilization,
 )
-
-# one shaped buffer: f32[128,256]  (layout braces optional)
-_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
-_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%?[\w.\-]+)\s*=\s*(.+)$")
-_OPND_RE = re.compile(r"\(([^)]*)\)")
-
-
-def _shape_bytes(text: str) -> int:
-    """Sum bytes over all shaped buffers appearing in ``text``."""
-    total = 0
-    for dt, dims in _SHAPE_RE.findall(text):
-        if dt not in _DTYPE_BYTES:
-            continue
-        n = 1
-        for d in dims.split(","):
-            if d:
-                n *= int(d)
-        total += n * _DTYPE_BYTES[dt]
-    return total
-
-
-def collective_bytes(hlo_text: str) -> Dict[str, int]:
-    """Per-collective-kind operand bytes (per device) from optimized HLO."""
-    sizes: Dict[str, int] = {}
-    # First pass: instruction result sizes.
-    pending = []
-    for line in hlo_text.splitlines():
-        m = _DEF_RE.match(line)
-        if not m:
-            continue
-        name, rhs = m.groups()
-        # result type = everything before the opcode; take shapes up to the
-        # first opcode occurrence — simplest: shapes in rhs before '('.
-        head = rhs.split("(", 1)[0]
-        sizes[name.lstrip("%")] = _shape_bytes(head)
-        for kind in _COLLECTIVES:
-            # match opcode token, e.g. " all-reduce(" or "all-reduce-start("
-            if re.search(rf"\b{kind}(-start)?\(", rhs):
-                pending.append((kind, rhs))
-                break
-
-    out = {k: 0 for k in _COLLECTIVES}
-    for kind, rhs in pending:
-        opnds = _OPND_RE.search(rhs)
-        got = 0
-        if opnds:
-            for op in opnds.group(1).split(","):
-                op = op.strip().lstrip("%")
-                # operands may be written as 'f32[..] %name' or just '%name'
-                tok = op.split(" ")[-1].lstrip("%")
-                if tok in sizes:
-                    got += sizes[tok]
-                else:
-                    got += _shape_bytes(op)
-        if got == 0:
-            # fallback: result size
-            got = _shape_bytes(rhs.split("(", 1)[0])
-        out[kind] += got
-    return out
 
 
 def roofline_terms(
     flops_per_dev: float,
     bytes_per_dev: float,
-    coll_bytes_per_dev: float,
-) -> Dict[str, float]:
-    """Per-chip seconds for each roofline term (already per-device)."""
-    t_c = flops_per_dev / PEAK_FLOPS
-    t_m = bytes_per_dev / HBM_BW
-    t_n = coll_bytes_per_dev / ICI_BW
+    coll_bytes_per_dev: float = 0.0,
+    peaks: Optional[DevicePeaks] = None,
+) -> Dict[str, object]:
+    """Per-device seconds for each roofline term and the binding one."""
+    peaks = peaks or device_peaks()
+    t_c = flops_per_dev / peaks.flops_per_s
+    t_m = bytes_per_dev / peaks.hbm_bw
+    t_n = coll_bytes_per_dev / peaks.ici_bw
     dominant = max(
         [("compute", t_c), ("memory", t_m), ("collective", t_n)],
         key=lambda kv: kv[1],
     )[0]
-    total = max(t_c, t_m, t_n)
     return {
         "compute_s": t_c,
         "memory_s": t_m,
         "collective_s": t_n,
         "dominant": dominant,
-        "bound_s": total,
+        "bound_s": max(t_c, t_m, t_n),
+        "peaks": peaks.name,
     }
-
-
-def model_flops(cfg, shape, n_params: int, n_active_params: int) -> float:
-    """MODEL_FLOPS = 6*N*D (train) / 2*N*D (prefill) / 2*N*B (decode),
-    with N = active params for MoE."""
-    n = n_active_params
-    if shape.kind == "train":
-        return 6.0 * n * shape.global_batch * shape.seq_len
-    if shape.kind == "prefill":
-        return 2.0 * n * shape.global_batch * shape.seq_len
-    return 2.0 * n * shape.global_batch  # decode: one token per sequence
-
-
-def count_params(cfg, params_shape) -> Dict[str, float]:
-    """Total and active (MoE-discounted) parameter counts from a
-    ShapeDtypeStruct tree."""
-    import jax
-
-    total = 0
-    active = 0
-    for path, leaf in jax.tree_util.tree_flatten_with_path(params_shape)[0]:
-        pstr = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
-        n = 1
-        for d in leaf.shape:
-            n *= d
-        total += n
-        if cfg.n_experts > 0 and ("/moe/" in pstr or pstr.endswith("router")) \
-                and any(k in pstr for k in ("w_gate", "w_up", "w_down")) \
-                and "shared" not in pstr:
-            active += n * cfg.n_experts_active / max(cfg.n_experts, 1)
-        else:
-            active += n
-    return {"total": float(total), "active": float(active)}

@@ -51,6 +51,7 @@ import jax.numpy as jnp
 
 from repro import obs
 from repro.obs import compile_log
+from repro.obs import profile as obs_profile
 
 from . import ordering, pruning
 
@@ -291,7 +292,12 @@ def fit_fn(x, config: FitConfig = FitConfig()) -> FitResult:
         with obs.span("fit.mesh", m=x.shape[0], d=x.shape[1]):
             return sharded.fit_sharded(x, config)
     with obs.span("fit.local", m=x.shape[0], d=x.shape[1]):
-        return _fit_local(x, config)
+        # Same (op, shape, config) signature as the compile_log.record
+        # inside fit_impl, so cost rows join compile events.
+        return obs_profile.call(
+            _fit_local, x, config,
+            op="core.fit", shape=x.shape, config=config,
+        )
 
 
 _STATS_EPS = 1e-12
@@ -356,6 +362,8 @@ def fit_from_stats(
             "plan recomputes statistics shard-locally — drop "
             "config.partition or use fit_fn."
         )
-    return _fit_from_stats_local(
-        jnp.asarray(x), jnp.asarray(mean), jnp.asarray(cov), config
+    x = jnp.asarray(x)
+    return obs_profile.call(
+        _fit_from_stats_local, x, jnp.asarray(mean), jnp.asarray(cov), config,
+        op="core.fit_from_stats", shape=x.shape, config=config,
     )

@@ -36,6 +36,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.obs import compile_log
+from repro.obs import profile as obs_profile
 
 from .api import FitConfig, FitResult, fit_impl, fit_impl_from_stats
 
@@ -64,15 +65,32 @@ def _require_local_plan(config: FitConfig, engine: str) -> None:
 
 
 @functools.partial(jax.jit, static_argnames=("config",))
-def fit_many(xs, config: FitConfig = FitConfig()) -> FitResult:
-    """Fit every dataset in ``xs`` (b, m, d); returns a batched FitResult
-    (order: (b, d), adjacency: (b, d, d), resid_var: (b, d))."""
+def _fit_many_jit(xs, config: FitConfig) -> FitResult:
     _require_local_plan(config, "fit_many")
     compile_log.record("batched.fit_many", shape=xs.shape, config=config)
     return jax.vmap(lambda x: fit_impl(x, config))(xs)
 
 
+def fit_many(xs, config: FitConfig = FitConfig()) -> FitResult:
+    """Fit every dataset in ``xs`` (b, m, d); returns a batched FitResult
+    (order: (b, d), adjacency: (b, d, d), resid_var: (b, d))."""
+    return obs_profile.call(
+        _fit_many_jit, xs, config,
+        op="batched.fit_many", shape=xs.shape, config=config,
+    )
+
+
 @functools.partial(jax.jit, static_argnames=("config",))
+def _fit_many_from_stats_jit(xs, means, covs, config: FitConfig) -> FitResult:
+    _require_local_plan(config, "fit_many_from_stats")
+    compile_log.record(
+        "batched.fit_many_from_stats", shape=xs.shape, config=config
+    )
+    return jax.vmap(
+        lambda x, mu, cv: fit_impl_from_stats(x, mu, cv, config)
+    )(xs, means, covs)
+
+
 def fit_many_from_stats(
     xs, means, covs, config: FitConfig = FitConfig()
 ) -> FitResult:
@@ -81,13 +99,10 @@ def fit_many_from_stats(
     (b, d, d) — fit as one vmapped program. The serving engine routes
     due stream-session refits here so a burst of rolling windows costs
     one device-parallel dispatch instead of b sequential fits."""
-    _require_local_plan(config, "fit_many_from_stats")
-    compile_log.record(
-        "batched.fit_many_from_stats", shape=xs.shape, config=config
+    return obs_profile.call(
+        _fit_many_from_stats_jit, xs, means, covs, config,
+        op="batched.fit_many_from_stats", shape=xs.shape, config=config,
     )
-    return jax.vmap(
-        lambda x, mu, cv: fit_impl_from_stats(x, mu, cv, config)
-    )(xs, means, covs)
 
 
 def warmup_fit_many(shape, config: FitConfig = FitConfig(), *, batch: int = 1):
@@ -110,6 +125,15 @@ def resample_indices(seed, n_sampling: int, m: int):
 
 
 @functools.partial(jax.jit, static_argnames=("config",))
+def _bootstrap_fits_jit(x, indices, config: FitConfig) -> FitResult:
+    _require_local_plan(config, "bootstrap_fits")
+    compile_log.record(
+        "batched.bootstrap_fits", shape=indices.shape, config=config
+    )
+    xs = jnp.take(x.astype(jnp.float32), indices, axis=0)  # (b, m, d)
+    return jax.vmap(lambda xb: fit_impl(xb, config))(xs)
+
+
 def bootstrap_fits(x, indices, config: FitConfig = FitConfig()) -> FitResult:
     """All bootstrap refits as one compiled program.
 
@@ -123,15 +147,26 @@ def bootstrap_fits(x, indices, config: FitConfig = FitConfig()) -> FitResult:
       (``bootstrap._summarize``), kept out of this program so threshold
       sweeps reuse the compile cache.
     """
-    _require_local_plan(config, "bootstrap_fits")
-    compile_log.record(
-        "batched.bootstrap_fits", shape=indices.shape, config=config
+    return obs_profile.call(
+        _bootstrap_fits_jit, x, indices, config,
+        op="batched.bootstrap_fits", shape=indices.shape, config=config,
     )
-    xs = jnp.take(x.astype(jnp.float32), indices, axis=0)  # (b, m, d)
-    return jax.vmap(lambda xb: fit_impl(xb, config))(xs)
 
 
 @functools.partial(jax.jit, static_argnames=("config", "post"))
+def _bootstrap_fits_with_jit(
+    x, indices, config: FitConfig, post
+) -> "tuple[FitResult, object]":
+    _require_local_plan(config, "bootstrap_fits_with")
+    xs = jnp.take(x.astype(jnp.float32), indices, axis=0)  # (b, m, d)
+
+    def one(xb):
+        r = fit_impl(xb, config)
+        return r, post(r)
+
+    return jax.vmap(one)(xs)
+
+
 def bootstrap_fits_with(
     x, indices, config: FitConfig, post
 ) -> "tuple[FitResult, object]":
@@ -145,11 +180,7 @@ def bootstrap_fits_with(
     dispatch or host round-trip. Returns ``(batched FitResult, batched
     post pytree)``.
     """
-    _require_local_plan(config, "bootstrap_fits_with")
-    xs = jnp.take(x.astype(jnp.float32), indices, axis=0)  # (b, m, d)
-
-    def one(xb):
-        r = fit_impl(xb, config)
-        return r, post(r)
-
-    return jax.vmap(one)(xs)
+    return obs_profile.call(
+        _bootstrap_fits_with_jit, x, indices, config, post,
+        op="batched.bootstrap_fits_with", shape=indices.shape, config=config,
+    )

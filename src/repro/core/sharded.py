@@ -58,6 +58,7 @@ from jax.sharding import PartitionSpec as P
 from repro.kernels import ops
 from repro.kernels.ops import _round_up
 from repro.obs import compile_log
+from repro.obs import profile as obs_profile
 from . import measures, ordering, pruning
 from .api import FitConfig, FitResult
 
@@ -360,7 +361,11 @@ def fit_sharded(x, config: FitConfig) -> FitResult:
     m, d = x.shape
     fn, m_pad, d_pad = _build_sharded_fit(m, d, config)
     x_pad = jnp.pad(x, ((0, m_pad - m), (0, d_pad - d)))
-    order, b, resid_var = fn(x_pad)
+    # Keyed on the *unpadded* (m, d) + config, matching the
+    # compile_log.record("sharded.fit", ...) inside the trace body.
+    order, b, resid_var = obs_profile.call(
+        fn, x_pad, op="sharded.fit", shape=(m, d), config=config,
+    )
     return FitResult(order=order, adjacency=b, resid_var=resid_var)
 
 

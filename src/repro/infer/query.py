@@ -44,6 +44,7 @@ from repro import obs
 from repro.core import api, batched
 from repro.obs import compile_log
 from repro.obs import metrics as obs_metrics
+from repro.obs import profile as obs_profile
 
 from . import effects as effects_lib
 from . import intervene as intervene_lib
@@ -263,7 +264,10 @@ class QueryEngine:
 
     def _run_effects(self, part):
         _, adj, order = self._stack_graphs(part)
-        out = np.asarray(_effects_batch(adj, order))
+        out = np.asarray(obs_profile.call(
+            _effects_batch, adj, order,
+            op="query.effects", shape=adj.shape,
+        ))
         for i, q in enumerate(part):
             q.effects = out[i]
 
@@ -271,11 +275,12 @@ class QueryEngine:
         gs, adj, order = self._stack_graphs(part)
         d = gs[0].d
         masks, values = zip(*(intervene_lib.do_arrays(d, q.do) for q in part))
-        mu, cov = _intervene_batch(
-            adj, order,
+        mu, cov = obs_profile.call(
+            _intervene_batch, adj, order,
             jnp.asarray(np.stack(masks)), jnp.asarray(np.stack(values)),
             jnp.asarray(np.stack([g.noise_mean for g in gs])),
             jnp.asarray(np.stack([g.noise_var for g in gs])),
+            op="query.intervention", shape=adj.shape,
         )
         mu, cov = np.asarray(mu), np.asarray(cov)
         for i, q in enumerate(part):
@@ -300,10 +305,10 @@ class QueryEngine:
         for start in range(0, n, slab):
             block = rows[:, start:start + slab]
             k = block.shape[1]
-            s, c = _rca_batch(
-                adj, order,
-                jnp.asarray(rca_lib._pad_rows(block, slab, axis=1)),
-                means, noise_var, targets,
+            padded = jnp.asarray(rca_lib._pad_rows(block, slab, axis=1))
+            s, c = obs_profile.call(
+                _rca_batch, adj, order, padded, means, noise_var, targets,
+                op="query.rca", shape=padded.shape,
             )
             scores_parts.append(np.asarray(s)[:, :k])
             contrib_parts.append(np.asarray(c)[:, :k])

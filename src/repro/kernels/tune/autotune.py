@@ -23,6 +23,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.obs import profile as obs_profile
+
 from . import cache as tune_cache
 from . import registry
 
@@ -51,7 +53,30 @@ class TunePlan:
     measurements: List[Measurement]
 
     def to_row(self) -> dict:
-        return {
+        """JSON row for BENCH_kernels.json: the decision plus, when the
+        analytic cost model covers this op, each candidate's achieved
+        GFLOP/s and roofline fraction against the device-peaks registry
+        — and the VMEM working-set model of every Pallas candidate, so
+        the tuning table doubles as the model-validation artifact."""
+        best_s = min(m.seconds for m in self.measurements)
+        cost = obs_profile.analytic_cost(self.op, self.shape)
+        peaks = obs_profile.device_peaks(self.device_kind)
+
+        def cand_row(m: "Measurement") -> dict:
+            row = {**m.plan.to_entry(), "us": m.seconds * 1e6}
+            if m.plan.backend == "pallas" and m.plan.bi:
+                row["vmem_model_bytes"] = registry.vmem_bytes(
+                    m.plan.bi, m.plan.bj, m.plan.bm
+                )
+            if cost is not None:
+                u = obs_profile.utilization(
+                    cost["flops"], cost["bytes"], m.seconds, peaks
+                )
+                row["gflops_per_s"] = u["gflops_per_s"]
+                row["roofline_frac"] = u["roofline_frac"]
+            return row
+
+        row = {
             "key": self.key,
             "op": self.op,
             "dtype": self.dtype,
@@ -59,12 +84,19 @@ class TunePlan:
             "device_kind": self.device_kind,
             "shape": list(self.shape),
             "best": self.best.to_entry(),
-            "best_us": min(m.seconds for m in self.measurements) * 1e6,
-            "candidates": [
-                {**m.plan.to_entry(), "us": m.seconds * 1e6}
-                for m in self.measurements
-            ],
+            "best_us": best_s * 1e6,
+            "candidates": [cand_row(m) for m in self.measurements],
         }
+        if cost is not None:
+            u = obs_profile.utilization(
+                cost["flops"], cost["bytes"], best_s, peaks
+            )
+            row["flops"] = cost["flops"]
+            row["bytes"] = cost["bytes"]
+            row["gflops_per_s"] = u["gflops_per_s"]
+            row["roofline_frac"] = u["roofline_frac"]
+            row["bound"] = u["bound"]
+        return row
 
 
 def candidate_plans(

@@ -41,6 +41,7 @@ import functools
 from typing import Callable, Dict, Optional, Tuple
 
 from repro.obs import metrics as obs_metrics
+from repro.obs import profile as obs_profile
 from repro.obs import trace as obs_trace
 
 from . import cache as tune_cache
@@ -434,6 +435,16 @@ def dispatch(
         "kernels.dispatch",
         op=op, backend=plan.backend, variant=plan.variant,
         source=plan.source,
+    )
+    # Profiling on: the decision's analytic cost model + VMEM working
+    # set become gauges next to the measured cost records, so a plan
+    # whose model disagrees with captured temp_bytes is visible.
+    obs_profile.note_plan(
+        op, shape, variant=plan.variant, source=plan.source,
+        vmem_model_bytes=(
+            vmem_bytes(plan.bi, plan.bj, plan.bm)
+            if plan.backend == "pallas" and plan.bi else 0
+        ),
     )
     return plan
 

@@ -16,6 +16,13 @@ Three jit-safe primitives, wired through every layer of the repo:
     records its trace body, so recompile storms are queryable (and the
     test suite pins one-compile-per-bucket invariants through this
     public API instead of private counters).
+  * :mod:`repro.obs.profile` — performance accounting on top of the
+    other three: per-program ``cost_analysis()`` FLOPs/bytes and
+    ``memory_analysis()`` watermarks keyed like the compile log,
+    roofline utilization against the device-peaks registry, and
+    ``device_trace()`` for span-annotated ``jax.profiler`` timelines.
+    Off by default; enable with :func:`repro.obs.profile.enable` or
+    ``REPRO_OBS_PROFILE=1``.
 
 ``analysis/regress.py`` closes the loop: it compares fresh benchmark
 runs against the committed ``BENCH_*.json`` baselines (stamped with
@@ -27,7 +34,7 @@ from __future__ import annotations
 import time
 from typing import Any, Dict
 
-from . import compile_log, metrics, ring, trace
+from . import compile_log, metrics, profile, ring, trace
 from .ring import BoundedRing  # noqa: F401
 from .trace import (  # noqa: F401  (re-exported convenience surface)
     enable,
@@ -45,6 +52,7 @@ __all__ = [
     "BoundedRing",
     "compile_log",
     "metrics",
+    "profile",
     "ring",
     "trace",
     "enable",
@@ -62,10 +70,11 @@ __all__ = [
 
 
 def reset_all() -> None:
-    """Clear spans, metrics, and the compile log in one call."""
+    """Clear spans, metrics, the compile log, and cost records."""
     trace.reset()
     metrics.reset()
     compile_log.reset()
+    profile.reset()
 
 
 def provenance(repo_root: str = ".") -> Dict[str, Any]:
@@ -91,9 +100,15 @@ def provenance(repo_root: str = ".") -> Dict[str, Any]:
         out["jax_version"] = jax.__version__
         out["device_kind"] = jax.devices()[0].device_kind
         out["backend"] = jax.default_backend()
+        out["platform"] = jax.devices()[0].platform
         out["n_devices"] = jax.device_count()
     except Exception:  # pragma: no cover - jax must not be a hard dep here
         out["jax_version"] = out["device_kind"] = "unknown"
+    import os as _os
+    import platform as _platform
+
+    out["machine"] = _platform.machine()
+    out["xla_flags"] = _os.environ.get("XLA_FLAGS", "")
     try:
         import subprocess
 

@@ -53,6 +53,19 @@ class _Stack(threading.local):
 
 _stack = _Stack()
 
+# Optional span mirror: when set (by obs.profile.device_trace), every
+# entered span calls it with the span name and enters the returned
+# context manager — a jax.profiler.TraceAnnotation — so host spans show
+# up on the device timeline under the same names. None (the default)
+# costs one attribute read per span.
+_annotation_hook = None
+
+
+def set_annotation_hook(fn) -> None:
+    """Install/clear (``None``) the span->device-annotation mirror."""
+    global _annotation_hook
+    _annotation_hook = fn
+
 
 def enable(on: bool = True) -> None:
     """Turn telemetry on (spans + metrics). Off by default."""
@@ -81,7 +94,9 @@ def _in_jax_trace() -> bool:
 class Span:
     """One timed host region. Use via :func:`span`, not directly."""
 
-    __slots__ = ("name", "attrs", "traced", "t0", "duration_s", "children")
+    __slots__ = (
+        "name", "attrs", "traced", "t0", "duration_s", "children", "_ann",
+    )
 
     def __init__(self, name: str, attrs: Dict[str, Any]):
         self.name = name
@@ -90,6 +105,7 @@ class Span:
         self.t0 = 0.0
         self.duration_s = 0.0
         self.children: List["Span"] = []
+        self._ann = None
 
     def set(self, **attrs) -> "Span":
         """Attach/overwrite attributes mid-span."""
@@ -98,12 +114,23 @@ class Span:
 
     def __enter__(self) -> "Span":
         self.traced = _in_jax_trace()
+        if _annotation_hook is not None:
+            try:
+                self._ann = _annotation_hook(self.name)
+                self._ann.__enter__()
+            except Exception:
+                self._ann = None
         _stack.spans.append(self)
         self.t0 = time.perf_counter()
         return self
 
     def __exit__(self, exc_type, exc, tb) -> None:
         self.duration_s = time.perf_counter() - self.t0
+        if self._ann is not None:
+            try:
+                self._ann.__exit__(exc_type, exc, tb)
+            finally:
+                self._ann = None
         if exc_type is not None:
             self.attrs["error"] = exc_type.__name__
         stack = _stack.spans

@@ -1,10 +1,6 @@
-"""Batched serving engines: LM decode slots + causal-discovery fits.
+"""Batched causal-discovery serving engine.
 
-``ServeEngine`` keeps a fixed-size batch of decode slots; requests are
-admitted into free slots (continuous batching lite), share one jitted
-decode step, and complete independently. Greedy or temperature sampling.
-
-``CausalDiscoveryEngine`` is the same idea for DirectLiNGAM traffic:
+``CausalDiscoveryEngine`` serves DirectLiNGAM traffic:
 fit requests are grouped by (m, d) shape, padded to a fixed micro-batch,
 and executed through the functional core's batched engine
 (``repro.core.batched.fit_many``) — one compile per dataset shape, then
@@ -49,87 +45,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
-from repro.configs.base import ArchConfig
 from repro.core import api as lingam_api
 from repro.core import batched as lingam_batched
 from repro.infer import query as query_lib
-from repro.models import model as model_lib
 from repro.obs import metrics as obs_metrics
 from repro.stream import session as stream_session
 from repro.stream import window as stream_window
-
-
-@dataclasses.dataclass
-class Request:
-    prompt: np.ndarray  # (S,) int32
-    max_new_tokens: int = 16
-    out_tokens: Optional[List[int]] = None
-
-
-class ServeEngine:
-    def __init__(self, cfg: ArchConfig, params, *, batch_size: int = 4,
-                 max_seq: int = 128, temperature: float = 0.0, seed: int = 0):
-        self.cfg = cfg
-        self.params = params
-        self.batch = batch_size
-        self.max_seq = max_seq
-        self.temperature = temperature
-        self.key = jax.random.key(seed)
-
-        self._prefill = jax.jit(
-            lambda p, toks, fe: model_lib.prefill(
-                cfg, p, toks, max_seq=max_seq, frontend=fe
-            )
-        )
-        self._decode = jax.jit(
-            lambda p, tok, cache, pos, enc: model_lib.decode_step(
-                cfg, p, tok, cache, pos, enc_out=enc
-            ),
-            donate_argnums=(2,),
-        )
-
-    def _sample(self, logits):
-        logits = logits[:, : self.cfg.vocab_size]
-        if self.temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        self.key, sub = jax.random.split(self.key)
-        return jax.random.categorical(
-            sub, logits / self.temperature, axis=-1
-        ).astype(jnp.int32)
-
-    def generate(self, requests: List[Request], frontend=None):
-        """Run a batch of requests (padded to engine batch size)."""
-        assert len(requests) <= self.batch
-        prompts = [r.prompt for r in requests]
-        plen = max(len(p) for p in prompts)
-        toks = np.zeros((self.batch, plen), np.int32)
-        for i, p in enumerate(prompts):
-            toks[i, plen - len(p):] = p  # left-pad (shared position frame)
-        fe = frontend
-        if self.cfg.family in ("audio", "vlm") and fe is None:
-            fe = jnp.zeros(
-                (self.batch, self.cfg.n_frontend_tokens, self.cfg.d_model),
-                jnp.float32,
-            )
-        last, cache = self._prefill(self.params, jnp.asarray(toks), fe)
-        enc = fe.astype(jnp.bfloat16) if fe is not None else None
-
-        n_steps = max(r.max_new_tokens for r in requests)
-        outs = [[] for _ in requests]
-        tok = self._sample(last)[:, None]
-        for i, r in enumerate(requests):
-            outs[i].append(int(tok[i, 0]))
-        for s in range(1, n_steps):
-            logits, cache = self._decode(
-                self.params, tok, cache, jnp.int32(plen + s - 1), enc
-            )
-            tok = self._sample(logits)[:, None]
-            for i, r in enumerate(requests):
-                if s < r.max_new_tokens:
-                    outs[i].append(int(tok[i, 0]))
-        for r, o in zip(requests, outs):
-            r.out_tokens = o
-        return requests
 
 
 @dataclasses.dataclass

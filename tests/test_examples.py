@@ -26,38 +26,3 @@ def test_quickstart():
     out = _run(["examples/quickstart.py"])
     assert "parallel == sequential: True" in out
     assert "orders agree : True" in out
-
-
-@pytest.mark.slow
-def test_train_lm_smoke_and_serve(tmp_path):
-    out = _run([
-        "examples/train_lm.py", "--smoke",
-        "--ckpt-dir", str(tmp_path / "ck"),
-    ])
-    assert "trained to step 20" in out
-    assert "generated" in out
-
-
-@pytest.mark.slow
-def test_activation_causality():
-    out = _run(["examples/activation_causality.py"])
-    assert "layer causal order" in out
-
-
-@pytest.mark.slow
-def test_launch_train_smoke(tmp_path):
-    out = _run([
-        "-m", "repro.launch.train", "--arch", "qwen3-1.7b", "--smoke",
-        "--steps", "5", "--ckpt-dir", str(tmp_path / "ck"),
-    ])
-    assert "done: step=5" in out
-
-
-@pytest.mark.slow
-def test_launch_serve_smoke():
-    out = _run([
-        "-m", "repro.launch.serve", "--arch", "qwen2-1.5b", "--smoke",
-        "--requests", "2", "--batch", "2", "--new-tokens", "4",
-        "--max-seq", "32", "--prompt-len", "8",
-    ])
-    assert "tok/s" in out
